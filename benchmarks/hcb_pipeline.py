@@ -1,0 +1,45 @@
+"""Paper Fig. 7 analog: the HCB chain schedule and its latency model.
+
+Fig. 7 shows the initiation interval: packets stream through HCBs; the class
+sum waits for the last partial clause; subsequent datapoints pipeline at the
+packet rate.  Here the HCB chain is the word-axis grid of the clause_eval
+kernel; this benchmark measures the partial-clause schedule empirically by
+sweeping the word-block size (packets per HCB) and reports per-block cost —
+the structural analog of the paper's packets-per-datapoint latency curve.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packetizer
+from repro.kernels import ops
+
+
+def run(B: int = 512, C: int = 512, W: int = 32) -> list:
+    rng = np.random.default_rng(0)
+    lit = jnp.asarray(rng.integers(0, 2**32, (B, W), dtype=np.uint32))
+    inc_bits = (rng.random((C, W * 32)) < 0.03).astype(np.uint8)
+    inc = jnp.asarray(packetizer.pack_bits_np(inc_bits))
+
+    rows = []
+    for block_w in (1, 4, 16, 32):
+        fn = jax.jit(lambda l, i: ops.clause_fire(
+            l, i, use_kernel=True, interpret=True, block_w=block_w))
+        fn(lit, inc).block_until_ready()
+        t0 = time.perf_counter()
+        out = fn(lit, inc)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        n_hcbs = (W + block_w - 1) // block_w
+        rows.append((
+            f"fig7_hcb_blockw{block_w}",
+            dt * 1e6,
+            f"hcb_stages={n_hcbs};packets_per_stage={block_w};"
+            f"us_per_datapoint={dt / B * 1e6:.3f}",
+        ))
+    return rows

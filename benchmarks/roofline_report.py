@@ -1,0 +1,34 @@
+"""Roofline summary from the dry-run JSONL (assignment deliverable g).
+
+Reads ``dryrun_results.jsonl`` (latest record wins per cell) and emits one
+CSV row per compiled cell with the three terms and the bottleneck.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "dryrun_results.jsonl") -> list:
+    if not os.path.exists(path):
+        return [("roofline_report", 0.0, f"missing:{path} (run launch.dryrun --all)")]
+    cells = {}
+    for line in open(path):
+        r = json.loads(line)
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = []
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if r.get("status") != "ok":
+            rows.append((f"roofline_{arch}_{shape}_{mesh}", 0.0,
+                         f"status={r.get('status')}"))
+            continue
+        dom = max(("t_comp", "t_mem", "t_coll"), key=lambda k: r[k])
+        rows.append((
+            f"roofline_{arch}_{shape}_{mesh}",
+            r[dom] * 1e6,
+            f"bottleneck={r['bottleneck']};t_comp={r['t_comp']:.3g};"
+            f"t_mem={r['t_mem']:.3g};t_coll={r['t_coll']:.3g};"
+            f"useful={r['useful_flops_ratio']:.3f};temp_gb={r['temp_bytes']/1e9:.1f}",
+        ))
+    return rows

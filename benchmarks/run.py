@@ -1,0 +1,81 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement):
+  * table1_*   — paper Table I analog (TM vs FINN-style BNN)
+  * fig8_*     — paper Fig. 8 analog (logic-sharing resource savings)
+  * fig7_*     — paper Fig. 7 analog (HCB chain schedule sweep)
+  * tmcore_*   — TM datapath micro-benchmarks (train/infer steps)
+  * roofline_* — per dry-run cell roofline terms (deliverable g)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _tm_core_micro() -> list:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import tm
+    from repro.kernels import ops
+
+    rows = []
+    cfg = tm.TMConfig(n_features=784, n_classes=10, clauses_per_class=100,
+                      threshold=40, s=8.0)
+    st = tm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.integers(0, 2, (256, 784), dtype=np.uint8))
+    y = jnp.asarray(rng.integers(0, 10, 256, dtype=np.int32))
+
+    step = jax.jit(lambda ta, x, yy, s: ops.tm_train_step_kernel(cfg, ta, x, yy, s)[0])
+    ta = step(st.ta_state, X, y, jnp.uint32(0))
+    ta.block_until_ready()
+    t0 = time.perf_counter()
+    for i in range(3):
+        ta = step(ta, X, y, jnp.uint32(i))
+    ta.block_until_ready()
+    dt = (time.perf_counter() - t0) / 3
+    rows.append(("tmcore_train_step_b256", dt * 1e6,
+                 f"samples_s={256 / dt:,.0f}"))
+
+    pred = jax.jit(lambda ta, x: tm.predict(cfg, tm.TMState(ta, jnp.int32(0)), x))
+    pred(ta, X).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = pred(ta, X)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / 5
+    rows.append(("tmcore_dense_infer_b256", dt * 1e6,
+                 f"inf_s={256 / dt:,.0f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow train-from-scratch tables")
+    args = ap.parse_args()
+
+    from benchmarks import hcb_pipeline, logic_sharing, roofline_report, table1_inference
+
+    rows = []
+    rows += _tm_core_micro()
+    rows += hcb_pipeline.run()
+    if not args.fast:
+        rows += table1_inference.run("mnist")
+        rows += logic_sharing.run("mnist")
+    rows += roofline_report.run()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

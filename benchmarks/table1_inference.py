@@ -1,0 +1,76 @@
+"""Paper Table I analog: TM accelerator vs FINN-style BNN, like-for-like.
+
+On the paper's FPGA the comparison is LUTs/BRAM/latency/throughput; on this
+substrate the like-for-like quantities are inference latency (us/datapoint),
+throughput (inf/s), accuracy on the same synthetic dataset, and the
+"resource" analog — model bytes moved per inference (the streaming
+bandwidth the MATADOR design is built around).
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks.run contract).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import bnn
+from repro.core import compiler, packetizer, tm, train
+from repro.data import paper_dataset
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(dataset: str = "mnist", n_eval: int = 2048) -> list:
+    rows = []
+    X, y, Xte, yte = paper_dataset(dataset, n_train=3000, n_test=n_eval)
+
+    # --- MATADOR TM (200 clauses/class for MNIST per paper Table II scale) --
+    cfg = tm.TMConfig(n_features=X.shape[1], n_classes=int(y.max()) + 1,
+                      clauses_per_class=40, threshold=40, s=8.0)
+    st = tm.init(cfg, jax.random.PRNGKey(0))
+    st = train.fit(cfg, st, jnp.asarray(X), jnp.asarray(y), epochs=6,
+                   batch_size=50, rng=jax.random.PRNGKey(1))
+    comp = compiler.compile_tm(cfg, st.ta_state)
+    xp = packetizer.pack_literals(jnp.asarray(Xte))
+    run_tm = jax.jit(lambda xw: jnp.argmax(compiler.run_compiled(comp, xw), -1))
+    dt = _time(run_tm, xp)
+    acc = float((np.asarray(run_tm(xp)) == yte).mean())
+    bytes_per_inf = comp.include_words.nbytes / n_eval + comp.n_words_active * 4
+    rows.append((
+        f"table1_tm_{dataset}",
+        dt / n_eval * 1e6,
+        f"acc={acc:.3f};inf_s={n_eval / dt:,.0f};words={comp.n_words_active};"
+        f"unique_clauses={comp.n_unique};stream_bytes={bytes_per_inf:.0f}",
+    ))
+
+    # --- FINN-style BNN (784-256-256-256-10 topology, Table II) -------------
+    bcfg = bnn.BNNConfig(
+        layer_sizes=(X.shape[1], 256, 256, 256, int(y.max()) + 1), lr=5e-2
+    )
+    params = bnn.bnn_init(bcfg, jax.random.PRNGKey(0))
+    params = bnn.bnn_train(bcfg, params, X, y, epochs=15, batch_size=50,
+                           rng=jax.random.PRNGKey(1))
+    packed = bnn.bnn_pack(params)
+    run_bnn = jax.jit(lambda xb: bnn.bnn_predict(packed, xb))
+    xte = jnp.asarray(Xte)
+    dt_b = _time(run_bnn, xte)
+    acc_b = float((np.asarray(run_bnn(xte)) == yte).mean())
+    weight_bytes = sum(int(w.nbytes) for w, _ in packed)
+    rows.append((
+        f"table1_bnn_{dataset}",
+        dt_b / n_eval * 1e6,
+        f"acc={acc_b:.3f};inf_s={n_eval / dt_b:,.0f};weight_bytes={weight_bytes};"
+        f"tm_speedup={dt_b / dt:.2f}x",
+    ))
+    return rows

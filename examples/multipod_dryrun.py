@@ -1,0 +1,33 @@
+"""Drive the multi-pod dry-run programmatically (deliverable e).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch tinyllama-1.1b
+
+Lowers + compiles the chosen architecture on both production meshes and
+prints the memory/cost/roofline summary.
+"""
+
+# The dry-run module sets XLA_FLAGS before any jax import — import it first.
+import repro.launch.dryrun as dryrun  # noqa: E402  (device-count side effect)
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    for mesh in ("pod", "multipod"):
+        rec = dryrun.run_cell(args.arch, args.shape, mesh)
+        print(f"\n== {args.arch} x {args.shape} on {mesh} "
+              f"({rec['n_devices']} chips) ==")
+        print(json.dumps({k: rec[k] for k in (
+            "bottleneck", "t_comp", "t_mem", "t_coll",
+            "useful_flops_ratio", "arg_bytes", "temp_bytes",
+        )}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Emit the EXPERIMENTS.md roofline table from dryrun_results.jsonl."""
+
+import json
+import sys
+
+
+def main(path="dryrun_results.jsonl"):
+    cells = {}
+    for line in open(path):
+        r = json.loads(line)
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+
+    print("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+          "bottleneck | useful | temp GB | args GB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if r["status"] == "skip":
+            reason = "long_500k: full-attn skip" if "full-attention" in r.get("skipped", "") \
+                else "dp layout: >10B skip"
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | *{reason}* | | | |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | {mesh} | FAIL | | | | | | |")
+            continue
+        print(
+            f"| {arch} | {shape} | {mesh} "
+            f"| {r['t_comp']:.3g} | {r['t_mem']:.3g} | {r['t_coll']:.3g} "
+            f"| **{r['bottleneck'][:4]}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['temp_bytes'] / 1e9:.1f} | {r['arg_bytes'] / 1e9:.2f} |"
+        )
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

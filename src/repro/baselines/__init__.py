@@ -1,0 +1,1 @@
+from repro.baselines.bnn import BNNConfig, bnn_init, bnn_predict, bnn_train  # noqa: F401

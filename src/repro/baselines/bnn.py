@@ -1,0 +1,106 @@
+"""FINN-style binarized MLP baseline (paper Table I comparison).
+
+Binary {-1,+1} weights/activations at inference via XNOR-popcount
+(kernels/xnor_popcount.py); trained with straight-through estimators in
+float, exactly the BNN recipe FINN compiles.  Topologies default to the
+paper's Table II entries (e.g. MNIST 784-256-256-256-10).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packetizer
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNConfig:
+    layer_sizes: Tuple[int, ...] = (784, 256, 256, 256, 10)
+    lr: float = 1e-3
+
+
+def bnn_init(cfg: BNNConfig, rng) -> list:
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(cfg.layer_sizes[:-1], cfg.layer_sizes[1:])):
+        rng, r = jax.random.split(rng)
+        params.append(jax.random.normal(r, (d_in, d_out)) * (d_in**-0.5))
+    return params
+
+
+def _sign(x):
+    return jnp.sign(jnp.where(x == 0, 1.0, x))
+
+
+def _binarize_ste(w):
+    """Straight-through sign with the standard |w|<=1 gradient clip."""
+    y = jnp.clip(w, -1.0, 1.0)
+    return y + jax.lax.stop_gradient(_sign(w) - y)
+
+
+def _forward_float(params, x):
+    """Training forward: binarized weights/activations, hard-tanh STE
+    (gradients flow only where the normalized pre-activation is in [-1, 1] —
+    the standard BNN recipe)."""
+    h = 2.0 * x.astype(jnp.float32) - 1.0          # {0,1} -> {-1,+1}
+    for i, w in enumerate(params):
+        wb = _binarize_ste(w)
+        h = h @ wb
+        if i < len(params) - 1:
+            hn = h / float(w.shape[0]) ** 0.5      # normalized pre-activation
+            y = jnp.clip(hn, -1.0, 1.0)
+            h = y + jax.lax.stop_gradient(_sign(h) - y)
+    return h
+
+
+def bnn_train(cfg: BNNConfig, params, X, y, *, epochs: int, batch_size: int, rng):
+    # logits scale: +-1 dot products reach +-d_in, saturating the softmax;
+    # dividing by sqrt(d_in) restores gradient flow (argmax-invariant, so
+    # the packed inference path is unaffected)
+    scale = 1.0 / float(cfg.layer_sizes[-2]) ** 0.5
+
+    @jax.jit
+    def step(params, xb, yb):
+        def loss_fn(p):
+            logits = _forward_float(p, xb) * scale
+            return jnp.mean(
+                -jax.nn.log_softmax(logits)[jnp.arange(xb.shape[0]), yb]
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return [p - cfg.lr * g for p, g in zip(params, grads)], loss
+
+    n = X.shape[0]
+    import numpy as np
+
+    nprng = np.random.default_rng(0)
+    for _ in range(epochs):
+        perm = nprng.permutation(n)
+        for i in range(n // batch_size):
+            idx = perm[i * batch_size : (i + 1) * batch_size]
+            params, _ = step(params, jnp.asarray(X[idx]), jnp.asarray(y[idx]))
+    return params
+
+
+def bnn_pack(params) -> List[Tuple[jnp.ndarray, int]]:
+    """Deployable artifact: per-layer packed sign-bit weight words."""
+    packed = []
+    for w in params:
+        bits = (jnp.sign(w) > 0).astype(jnp.uint8).T        # (out, in) bit rows
+        packed.append((packetizer.pack_bits(bits), w.shape[0]))
+    return packed
+
+
+def bnn_predict(packed, x, **kw) -> jnp.ndarray:
+    """Bitpacked XNOR-popcount inference over the whole stack."""
+    a = x.astype(jnp.uint8)                                  # {0,1} first layer
+    for i, (w_words, n_bits) in enumerate(packed):
+        a_words = packetizer.pack_bits(a)
+        dots = ops.xnor_dot(a_words, w_words, n_bits, **kw)  # (B, out) int32
+        if i < len(packed) - 1:
+            a = (dots >= 0).astype(jnp.uint8)                # sign activation
+    return jnp.argmax(dots, axis=-1)

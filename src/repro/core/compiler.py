@@ -1,0 +1,246 @@
+"""The boolean-to-silicon pass — MATADOR's model compiler, TPU edition.
+
+The paper translates a trained TM into a compact combinational circuit by
+exploiting (a) include sparsity and (b) logic sharing between clauses within
+and across classes (paper §II, Fig. 3, Fig. 8).  On FPGA that compression is
+performed by the synthesis tool's logic-absorption algorithms; here it is an
+explicit, host-side (numpy) compilation pass with three optimizations:
+
+  1. **Empty-clause removal** — all-exclude clauses are constant 0 at
+     inference; drop them (paper: they never reach the netlist).
+  2. **Clause deduplication** — identical include rows are evaluated once;
+     their votes are folded into an int32 (unique_clause x class) vote
+     matrix carrying multiplicity x polarity.  This is clause-granular logic
+     sharing: the shared sub-circuit is computed once and fanned out.
+  3. **Dead-word elimination** — packed literal words that no surviving
+     clause includes are never loaded (column pruning).  This is the
+     bandwidth optimization: the accelerator only streams words that matter.
+
+The compiled artifact runs through the same bitpacked evaluation path (and
+Pallas kernel) as the dense model and is *provably equivalent* to dense
+inference (tests/test_compiler.py, hypothesis property).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packetizer, tm
+
+
+@dataclasses.dataclass
+class CompileStats:
+    n_clauses_dense: int
+    n_clauses_nonempty: int
+    n_clauses_unique: int
+    n_words_dense: int
+    n_words_active: int
+    n_includes: int
+    n_literals: int
+    # partial-clause (HCB-term) sharing: two clauses whose include bits agree
+    # within word w share that word's AND gate (paper Fig. 5 logic sharing —
+    # on FPGA the synthesis absorbs these; we quantify the opportunity)
+    n_partial_terms_dense: int = 0
+    n_partial_terms_unique: int = 0
+
+    @property
+    def include_sparsity(self) -> float:
+        tot = self.n_clauses_dense * self.n_literals
+        return 1.0 - self.n_includes / max(tot, 1)
+
+    @property
+    def clause_sharing(self) -> float:
+        """Fraction of non-empty clauses absorbed by sharing (paper Fig. 8)."""
+        if self.n_clauses_nonempty == 0:
+            return 0.0
+        return 1.0 - self.n_clauses_unique / self.n_clauses_nonempty
+
+    @property
+    def word_compaction(self) -> float:
+        return 1.0 - self.n_words_active / max(self.n_words_dense, 1)
+
+    @property
+    def partial_term_sharing(self) -> float:
+        """Fraction of per-word AND gates absorbed by sub-clause sharing."""
+        if self.n_partial_terms_dense == 0:
+            return 0.0
+        return 1.0 - self.n_partial_terms_unique / self.n_partial_terms_dense
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            include_sparsity=self.include_sparsity,
+            clause_sharing=self.clause_sharing,
+            word_compaction=self.word_compaction,
+            partial_term_sharing=self.partial_term_sharing,
+        )
+        return d
+
+
+@dataclasses.dataclass
+class CompiledTM:
+    """Deployable inference artifact (the "bitstream" analog)."""
+
+    include_words: np.ndarray   # (U, Wa) uint32 — deduped, word-compacted
+    word_ids: np.ndarray        # (Wa,) int32 — active word indices into dense W
+    votes: np.ndarray           # (U, n_classes) int32 — multiplicity x polarity
+    n_features: int
+    n_classes: int
+    stats: CompileStats
+
+    @property
+    def n_unique(self) -> int:
+        return self.include_words.shape[0]
+
+    @property
+    def n_words_active(self) -> int:
+        return self.include_words.shape[1]
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            include_words=self.include_words,
+            word_ids=self.word_ids,
+            votes=self.votes,
+            meta=np.frombuffer(
+                json.dumps(
+                    dict(
+                        n_features=self.n_features,
+                        n_classes=self.n_classes,
+                        stats=self.stats.as_dict(),
+                    )
+                ).encode(),
+                dtype=np.uint8,
+            ),
+        )
+
+    @staticmethod
+    def load(path: str) -> "CompiledTM":
+        z = np.load(path)
+        meta = json.loads(bytes(z["meta"]).decode())
+        st = meta["stats"]
+        stats = CompileStats(
+            **{k: st[k] for k in (
+                "n_clauses_dense", "n_clauses_nonempty", "n_clauses_unique",
+                "n_words_dense", "n_words_active", "n_includes", "n_literals",
+                "n_partial_terms_dense", "n_partial_terms_unique",
+            ) if k in st}
+        )
+        return CompiledTM(
+            include_words=z["include_words"],
+            word_ids=z["word_ids"],
+            votes=z["votes"],
+            n_features=meta["n_features"],
+            n_classes=meta["n_classes"],
+            stats=stats,
+        )
+
+
+def compile_tm(
+    config: tm.TMConfig,
+    ta_state,
+    *,
+    dedup: bool = True,
+    prune_words: bool = True,
+) -> CompiledTM:
+    """Compile a trained automata bank into a :class:`CompiledTM`.
+
+    ``dedup=False, prune_words=False`` is the DON'T-TOUCH-pragma analog used
+    by benchmarks/logic_sharing.py to measure the savings (paper Fig. 8).
+    """
+    ta = np.asarray(ta_state)
+    C_raw = config.n_clauses_raw
+    inc = (ta[:C_raw] >= 0).astype(np.uint8)               # (C, L)
+    pol = np.where(np.arange(C_raw) % 2 == 0, 1, -1).astype(np.int32)
+    cls = np.arange(C_raw) // config.clauses_per_class
+
+    nonempty = inc.any(axis=1)
+    inc_ne = inc[nonempty]
+    pol_ne = pol[nonempty]
+    cls_ne = cls[nonempty]
+    n_nonempty = int(inc_ne.shape[0])
+
+    words_dense = packetizer.pack_bits_np(inc_ne) if n_nonempty else np.zeros(
+        (0, packetizer.n_words(config.n_literals)), np.uint32
+    )
+    W = packetizer.n_words(config.n_literals)
+
+    if dedup and n_nonempty:
+        uniq, inv = np.unique(words_dense, axis=0, return_inverse=True)
+    else:
+        uniq, inv = words_dense, np.arange(n_nonempty)
+    U = uniq.shape[0]
+
+    votes = np.zeros((max(U, 1), config.n_classes), np.int32)
+    if n_nonempty:
+        np.add.at(votes, (inv, cls_ne), pol_ne)
+    if U == 0:
+        uniq = np.zeros((1, W), np.uint32)  # degenerate all-empty model
+        U = 1
+
+    if prune_words:
+        active = uniq.any(axis=0)
+        if not active.any():
+            active[:1] = True
+        word_ids = np.nonzero(active)[0].astype(np.int32)
+    else:
+        word_ids = np.arange(uniq.shape[1], dtype=np.int32)
+    uniq = uniq[:, word_ids]
+
+    # partial-clause sharing opportunity: unique nonzero include words per
+    # word column (zero words are free — they never gate anything)
+    nonzero_terms = int((uniq != 0).sum())
+    unique_terms = sum(
+        len(np.unique(col[col != 0])) for col in uniq.T
+    )
+    stats = CompileStats(
+        n_clauses_dense=C_raw,
+        n_clauses_nonempty=n_nonempty,
+        n_clauses_unique=int(U),
+        n_words_dense=int(W),
+        n_words_active=int(word_ids.shape[0]),
+        n_includes=int(inc.sum()),
+        n_literals=config.n_literals,
+        n_partial_terms_dense=nonzero_terms,
+        n_partial_terms_unique=int(unique_terms),
+    )
+    return CompiledTM(
+        include_words=uniq.astype(np.uint32),
+        word_ids=word_ids,
+        votes=votes[:U],
+        n_features=config.n_features,
+        n_classes=config.n_classes,
+        stats=stats,
+    )
+
+
+def run_compiled(
+    compiled: CompiledTM,
+    x_packed: jnp.ndarray,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Inference with the compiled artifact: (B, W_dense) packed literals ->
+    (B, n_classes) int32 class sums.
+
+    ``use_kernel`` dispatches the Pallas clause-eval kernel (interpret mode on
+    CPU); otherwise the pure-jnp bitpacked path (kernels/ref.py oracle).
+    """
+    from repro.kernels import ops
+
+    xw = x_packed[:, jnp.asarray(compiled.word_ids)]        # dead-word elim
+    inc = jnp.asarray(compiled.include_words)
+    fired = ops.clause_fire(xw, inc, use_kernel=use_kernel, interpret=interpret)
+    return fired.astype(jnp.int32) @ jnp.asarray(compiled.votes)
+
+
+def predict_compiled(compiled: CompiledTM, x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """(B, F) raw boolean features -> predicted class ids."""
+    xp = packetizer.pack_literals(x)
+    return jnp.argmax(run_compiled(compiled, xp, **kw), axis=-1)

@@ -1,0 +1,131 @@
+"""Tsetlin Automata feedback (Type I / Type II) — batch-parallel training.
+
+Semantics follow Granmo'18 (paper ref [9]) exactly at per-sample granularity:
+
+Type I (recognize; target-class positive clauses, negative-class negative
+clauses), applied to clause j with probability ``(T - clamp(sum))/2T`` resp.
+``(T + clamp(sum))/2T``:
+  * clause=1, literal=1: state += 1  w.p. 1 (boost) else (s-1)/s
+  * clause=1, literal=0: state -= 1  w.p. 1/s
+  * clause=0:            state -= 1  w.p. 1/s   (all literals)
+
+Type II (reject; the polarity-mirrored clauses):
+  * clause=1, literal=0, currently excluded: state += 1 (deterministic)
+
+The paper trains sample-sequentially on the host; here feedback deltas are
+computed per sample and *accumulated over the batch* before being applied
+(clamped) — the standard batch-parallel TM formulation that lets training
+shard over a `data` mesh axis (DESIGN.md §2 "changed assumptions").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tm
+
+
+def _clause_fire(ta_slice: jax.Array, lits: jax.Array) -> jax.Array:
+    """(cpc, L) int8 x (L,) {0,1} -> (cpc,) uint8, training semantics."""
+    inc = ta_slice >= 0
+    viol = inc & (lits[None, :] == 0)
+    return (~jnp.any(viol, axis=-1)).astype(jnp.uint8)
+
+
+def _clause_polarity(cpc: int) -> jax.Array:
+    return jnp.where(jnp.arange(cpc) % 2 == 0, 1, -1).astype(jnp.int32)
+
+
+def _class_feedback_delta(
+    config: tm.TMConfig,
+    ta_slice: jax.Array,     # (cpc, L) int8 — automata of one class
+    lits: jax.Array,         # (L,) {0,1}
+    is_target: jax.Array,    # bool scalar: True -> target-class roles
+    rng: jax.Array,
+) -> jax.Array:
+    """Per-sample feedback delta for one class. Returns (cpc, L) int8."""
+    cpc, L = ta_slice.shape
+    T = config.threshold
+    pol = _clause_polarity(cpc)
+
+    fire = _clause_fire(ta_slice, lits)                     # (cpc,)
+    csum = jnp.clip(jnp.sum(pol * fire.astype(jnp.int32)), -T, T)
+
+    p = jnp.where(is_target, (T - csum) / (2.0 * T), (T + csum) / (2.0 * T))
+
+    r_sel, r_act, r_inact = jax.random.split(rng, 3)
+    sel = jax.random.uniform(r_sel, (cpc,)) < p             # clause selected
+    # Type I goes to +polarity clauses of the target class and -polarity
+    # clauses of the negative class; Type II to the mirrored set.
+    type1 = jnp.where(is_target, pol > 0, pol < 0)          # (cpc,)
+
+    lit_on = lits[None, :] == 1                             # (1->cpc, L)
+    fire_b = (fire == 1)[:, None]                           # (cpc, 1)
+
+    # --- Type I ---
+    p_act = 1.0 if config.boost_true_positive else (config.s - 1.0) / config.s
+    act = jax.random.uniform(r_act, (cpc, L)) < p_act
+    inact = jax.random.uniform(r_inact, (cpc, L)) < (1.0 / config.s)
+    d1 = jnp.where(
+        fire_b,
+        jnp.where(lit_on, act.astype(jnp.int8), -inact.astype(jnp.int8)),
+        -inact.astype(jnp.int8),
+    )
+
+    # --- Type II ---
+    excluded = ta_slice < 0
+    d2 = (fire_b & (~lit_on) & excluded).astype(jnp.int8)
+
+    d = jnp.where(type1[:, None], d1, d2)
+    return jnp.where(sel[:, None], d, jnp.int8(0))
+
+
+def batch_feedback_delta(
+    config: tm.TMConfig,
+    ta_state: jax.Array,   # (C_total, L) int8
+    x: jax.Array,          # (B, F) {0,1}
+    y: jax.Array,          # (B,) int32
+    rng: jax.Array,
+) -> jax.Array:
+    """Summed feedback deltas over the batch: (C_total, L) int32.
+
+    Scans over samples (bounded memory: one (cpc, L) random field at a time)
+    and scatter-adds the per-class deltas of the target and one sampled
+    negative class.
+    """
+    cpc = config.clauses_per_class
+    B = x.shape[0]
+    lits_all = tm.literals(x)                                # (B, L)
+    acc0 = jnp.zeros(ta_state.shape, jnp.int32)
+
+    def body(acc, inp):
+        lits, yb, r = inp
+        r_neg, r_t, r_n = jax.random.split(r, 3)
+        # sample a negative class != yb (paper: one random other class)
+        kn = jax.random.randint(r_neg, (), 0, config.n_classes - 1)
+        kn = kn + (kn >= yb)
+
+        for cls_idx, is_tgt, rr in ((yb, True, r_t), (kn, False, r_n)):
+            off = cls_idx * cpc
+            sl = jax.lax.dynamic_slice_in_dim(ta_state, off, cpc, axis=0)
+            d = _class_feedback_delta(
+                config, sl, lits, jnp.asarray(is_tgt), rr
+            ).astype(jnp.int32)
+            cur = jax.lax.dynamic_slice_in_dim(acc, off, cpc, axis=0)
+            acc = jax.lax.dynamic_update_slice_in_dim(acc, cur + d, off, axis=0)
+        return acc, None
+
+    rngs = jax.random.split(rng, B)
+    acc, _ = jax.lax.scan(body, acc0, (lits_all, y, rngs))
+    return acc
+
+
+def apply_delta(config: tm.TMConfig, ta_state: jax.Array, delta: jax.Array) -> jax.Array:
+    """states <- clamp(states + delta) in int32, cast back to int8."""
+    new = jnp.clip(
+        ta_state.astype(jnp.int32) + delta,
+        -config.n_states,
+        config.n_states - 1,
+    )
+    return new.astype(jnp.int8)

@@ -1,0 +1,120 @@
+"""Mesh sharding for TM training/inference (DESIGN.md §5).
+
+Layout:
+  * automata / include words: clause axis over ``model``, replicated over
+    ``data`` (and ``pod``);
+  * batch: over (``pod`` x) ``data``;
+  * vote matrix: clause axis over ``model``;
+  * class sums: partial per model-shard -> one tiny ``psum`` over ``model``
+    (the only inference collective);
+  * training feedback deltas: computed locally per (data, model) shard, then
+    ``psum`` over ``data`` only — int32 bounded-magnitude "compressed
+    gradients".
+
+Implemented with jit + NamedSharding constraints (GSPMD inserts exactly the
+collectives above; verified in tests/test_sharding.py and the dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import tm
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tm_shardings(config: tm.TMConfig, mesh: Mesh):
+    """(state_sharding, batch_sharding) for the TM train/serve steps."""
+    d = data_axes(mesh)
+    state = tm.TMState(
+        ta_state=NamedSharding(mesh, P("model", None)),
+        steps=NamedSharding(mesh, P()),
+    )
+    batch = NamedSharding(mesh, P(d, None))
+    return state, batch
+
+
+def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh):
+    """Build a jit'd sharded inference fn: packed literals -> class ids.
+
+    Clause axis sharded over ``model``; GSPMD turns the vote matmul into a
+    local matmul + all-reduce over ``model`` of the (B, K) partial sums.
+    """
+    d = data_axes(mesh)
+    votes_s = NamedSharding(mesh, P("model", None))
+    inc_s = NamedSharding(mesh, P("model", None))
+    x_s = NamedSharding(mesh, P(d, None))
+    out_s = NamedSharding(mesh, P(d))
+
+    def predict(inc_words, votes, nonempty, lit_words):
+        from repro.kernels import ops
+
+        fired = ops.clause_fire(lit_words, inc_words, use_kernel=False)
+        fired = fired * nonempty[None, :].astype(fired.dtype)
+        sums = fired.astype(jnp.int32) @ votes
+        return jnp.argmax(sums, axis=-1)
+
+    return jax.jit(
+        predict,
+        in_shardings=(inc_s, votes_s, NamedSharding(mesh, P("model")), x_s),
+        out_shardings=out_s,
+    )
+
+
+def sharded_train_step_fn(config: tm.TMConfig, mesh: Mesh,
+                          batch_chunk: int | None = 2048,
+                          algorithm: str = "bitwise"):
+    """Build a jit'd sharded batch training step.
+
+    The kernel-path step (hash RNG) is used because its feedback plan is a
+    pure function of (fire, y, seed) — no cross-shard RNG state. Automata are
+    replicated over ``data`` and sharded over ``model`` on the clause axis;
+    the per-data-shard deltas are combined by GSPMD's all-reduce when the
+    (replicated-output) update is applied.
+    """
+    d = data_axes(mesh)
+    # matmul path: automata sharded over BOTH axes (clauses x literals): the
+    # step all-gathers the int8 states over `data` (34 MB at pod scale) and
+    # GSPMD reduce-scatters the f32 delta — far less wire than all-reducing
+    # the dense delta against data-replicated states.
+    lit_shard = d if algorithm == "matmul" else None
+    state_s = NamedSharding(mesh, P("model", lit_shard))
+    x_s = NamedSharding(mesh, P(d, None))
+    y_s = NamedSharding(mesh, P(d))
+
+    def step(ta_state, x, y, seed):
+        from repro.kernels import ops
+
+        if algorithm == "matmul":   # beyond-paper binomial-aggregation path
+            # explicit shard_map schedule: GSPMD falls back to a dense f32
+            # delta all-reduce here; the hand schedule is AG(int8) + two tiny
+            # psums + psum_scatter (see EXPERIMENTS.md §Perf, TM cell)
+            data_ax = d[-1] if d else "data"
+            return jax.shard_map(
+                lambda ta, xx, yy: ops.tm_train_step_matmul_local(
+                    config, ta, xx, yy, seed
+                ),
+                mesh=mesh,
+                in_specs=(P("model", data_ax), P(d, None), P(d)),
+                out_specs=P("model", data_ax),
+                check_vma=False,
+            )(ta_state, x, y)
+        new_ta, _ = ops.tm_train_step_kernel(
+            config, ta_state, x, y, seed, use_kernel=False,
+            batch_chunk=batch_chunk,
+        )
+        return new_ta
+
+    return jax.jit(
+        step,
+        in_shardings=(state_s, x_s, y_s, None),
+        out_shardings=state_s,
+        donate_argnums=0,
+    )

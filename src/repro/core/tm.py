@@ -1,0 +1,156 @@
+"""Tsetlin Machine core — paper-faithful definition (MATADOR / Granmo'18).
+
+The TM model is a bank of Tsetlin Automata, one per (class, clause, literal).
+``int8`` states centered at zero; action = *include* iff state >= 0.  A clause
+is the AND of its included literals; class sums are polarity-weighted clause
+votes; classification is the argmax over class sums.
+
+Everything here is a pure function over a ``TMState`` pytree so it composes
+with jit / vmap / shard_map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    """Hyperparameters of a (multiclass, vanilla) Tsetlin Machine.
+
+    Mirrors the knobs MATADOR's GUI exposes: clauses per class, threshold T,
+    specificity s, number of automata states.
+    """
+
+    n_features: int
+    n_classes: int
+    clauses_per_class: int
+    n_states: int = 128          # states per action -> int8 in [-128, 127]
+    threshold: int = 15          # T
+    s: float = 10.0              # specificity
+    boost_true_positive: bool = True
+    # Pad the flattened clause axis to a multiple of this (sharding alignment;
+    # padded clauses are permanently empty and vote 0).
+    clause_pad_multiple: int = 1
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+    @property
+    def n_clauses_total(self) -> int:
+        raw = self.n_classes * self.clauses_per_class
+        m = self.clause_pad_multiple
+        return ((raw + m - 1) // m) * m
+
+    @property
+    def n_clauses_raw(self) -> int:
+        return self.n_classes * self.clauses_per_class
+
+    def replace(self, **kw: Any) -> "TMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TMState:
+    """Trainable state: the automata bank, flattened over (class, clause)."""
+
+    ta_state: jax.Array  # int8 (n_clauses_total, n_literals)
+    steps: jax.Array     # int32 scalar
+
+    @property
+    def dtype(self):
+        return self.ta_state.dtype
+
+
+def init(config: TMConfig, rng: jax.Array) -> TMState:
+    """Random init in {-1, 0}: automata sit just either side of the decision
+    boundary, per standard TM initialization."""
+    shape = (config.n_clauses_total, config.n_literals)
+    st = jax.random.randint(rng, shape, minval=-1, maxval=1, dtype=jnp.int8)
+    if config.n_clauses_total != config.n_clauses_raw:
+        # padded clauses are pinned to all-exclude (empty) forever
+        pad_from = config.n_clauses_raw
+        st = st.at[pad_from:].set(jnp.int8(-config.n_states))
+    return TMState(ta_state=st, steps=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Literals & clauses
+# ---------------------------------------------------------------------------
+
+def literals(x: jax.Array) -> jax.Array:
+    """(B, F) {0,1} -> (B, 2F): each feature contributes x and ~x (Fig. 1b)."""
+    x = x.astype(jnp.uint8)
+    return jnp.concatenate([x, 1 - x], axis=-1)
+
+
+def include_mask(ta_state: jax.Array) -> jax.Array:
+    """Boolean include/exclude actions of each automaton."""
+    return ta_state >= 0
+
+
+def clause_outputs(
+    ta_state: jax.Array, lits: jax.Array, *, training: bool
+) -> jax.Array:
+    """Dense clause evaluation (the ``ref`` semantics the kernels must match).
+
+    clause fires iff no included literal is 0.  Empty clauses output 1 during
+    training (vacuous AND) and 0 at inference (they are dropped from the
+    compiled circuit, paper §III).
+
+    Args:
+      ta_state: (C, L) int8.
+      lits: (B, L) {0,1}.
+    Returns:
+      (B, C) uint8 clause outputs.
+    """
+    inc = include_mask(ta_state)                       # (C, L)
+    viol = inc[None, :, :] & (lits[:, None, :] == 0)    # (B, C, L)
+    fire = ~jnp.any(viol, axis=-1)                      # (B, C)
+    if not training:
+        nonempty = jnp.any(inc, axis=-1)                # (C,)
+        fire = fire & nonempty[None, :]
+    return fire.astype(jnp.uint8)
+
+
+def polarity(config: TMConfig) -> jax.Array:
+    """+1/-1 alternating within each class; 0 on padded clauses."""
+    j = jnp.arange(config.n_clauses_total)
+    pol = jnp.where(j % 2 == 0, 1, -1).astype(jnp.int32)
+    return jnp.where(j < config.n_clauses_raw, pol, 0)
+
+
+def vote_matrix(config: TMConfig) -> jax.Array:
+    """(C_total, n_classes) int32: class-sum = clause_outputs @ vote_matrix.
+
+    This is the class-sum adder bank of the paper's accelerator expressed as
+    an (MXU-friendly) int matmul.
+    """
+    c = jnp.arange(config.n_clauses_total)
+    cls = jnp.clip(c // config.clauses_per_class, 0, config.n_classes - 1)
+    onehot = (cls[:, None] == jnp.arange(config.n_classes)[None, :])
+    return onehot.astype(jnp.int32) * polarity(config)[:, None]
+
+
+def class_sums(
+    config: TMConfig, ta_state: jax.Array, lits: jax.Array, *, training: bool
+) -> jax.Array:
+    """(B, n_classes) int32 polarity-weighted clause votes."""
+    out = clause_outputs(ta_state, lits, training=training)   # (B, C)
+    return out.astype(jnp.int32) @ vote_matrix(config)
+
+
+def predict(config: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
+    """Argmax classification (binary-tree comparison in the paper)."""
+    sums = class_sums(config, state.ta_state, literals(x), training=False)
+    return jnp.argmax(sums, axis=-1)
+
+
+def accuracy(config: TMConfig, state: TMState, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((predict(config, state, x) == y).astype(jnp.float32))

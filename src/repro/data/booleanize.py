@@ -1,0 +1,26 @@
+"""Booleanization front-ends: real-valued features -> TM literals.
+
+The MATADOR GUI booleanizes grayscale/MFCC inputs before training; these are
+the two standard encoders from the TM literature (REDRESS, paper ref [5]).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def thermometer_encode(x: np.ndarray, n_bits: int = 8) -> np.ndarray:
+    """Per-feature thermometer code over [min, max]: (N, F) -> (N, F*n_bits)."""
+    lo = x.min(axis=0, keepdims=True)
+    hi = x.max(axis=0, keepdims=True)
+    span = np.maximum(hi - lo, 1e-9)
+    levels = (x - lo) / span * n_bits                     # (N, F) in [0, n_bits]
+    th = levels[..., None] > np.arange(n_bits)            # (N, F, n_bits)
+    return th.reshape(x.shape[0], -1).astype(np.uint8)
+
+
+def quantile_binarize(x: np.ndarray, n_bits: int = 4) -> np.ndarray:
+    """Quantile-threshold code: bit b set iff x > quantile_(b+1)/(n+1)."""
+    qs = np.quantile(x, np.linspace(0, 1, n_bits + 2)[1:-1], axis=0)  # (n, F)
+    bits = x[None, ...] > qs[:, None, :]                   # (n, N, F)
+    return bits.transpose(1, 2, 0).reshape(x.shape[0], -1).astype(np.uint8)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (+ pure-jnp oracles) for the MATADOR datapath.
+
+Kernels: clause_eval (HCB chain), class_sum (vote adders), ta_update
+(training feedback), xnor_popcount (BNN baseline layer).  ``ops`` is the
+dispatch layer; ``ref`` holds the oracles the kernels are tested against.
+"""

@@ -1,0 +1,423 @@
+"""Jit'd dispatch wrappers over the Pallas kernels (with oracle fallback).
+
+Every op takes ``use_kernel``/``interpret`` switches: on a real TPU the
+kernels run compiled (``interpret=False``); in this CPU container they are
+validated in interpret mode against the ``ref.py`` oracles, and the oracle
+path is the default execution engine (it is XLA-compiled and fast on CPU).
+
+``REPRO_USE_PALLAS=1`` flips the default to the kernels (interpret on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import class_sum as _class_sum_kernel
+from repro.kernels import clause_eval as _clause_eval_kernel
+from repro.kernels import ref
+from repro.kernels import ta_update as _ta_update_kernel
+from repro.kernels import xnor_popcount as _xnor_kernel
+
+_DEFAULT_USE_KERNEL = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _resolve(use_kernel, interpret):
+    if use_kernel is None:
+        use_kernel = _DEFAULT_USE_KERNEL
+    if interpret is None:
+        interpret = not _ON_TPU
+    return use_kernel, interpret
+
+
+def clause_fire(
+    lit_words: jax.Array,
+    inc_words: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    **blocks,
+) -> jax.Array:
+    """(B, W) x (C, W) packed -> (B, C) int8 clause outputs."""
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel:
+        return _clause_eval_kernel.clause_fire(
+            lit_words, inc_words, interpret=interpret, **blocks
+        )
+    return ref.clause_fire_ref(lit_words, inc_words)
+
+
+def class_sums(
+    fired: jax.Array,
+    votes: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    **blocks,
+) -> jax.Array:
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel:
+        return _class_sum_kernel.class_sum(fired, votes, interpret=interpret, **blocks)
+    return ref.class_sum_ref(fired, votes)
+
+
+def ta_delta(
+    ta, lits, fire, ftype, seed, *, p_act, p_inact, b_offset=0,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    **blocks,
+) -> jax.Array:
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel:
+        return _ta_update_kernel.ta_delta(
+            ta, lits, fire, ftype, seed,
+            p_act=p_act, p_inact=p_inact, b_offset=b_offset,
+            interpret=interpret, **blocks,
+        )
+    return ref.ta_delta_ref(ta, lits, fire, ftype, seed, p_act=p_act,
+                            p_inact=p_inact, b_offset=b_offset)
+
+
+def xnor_dot(
+    a_words, w_words, n_bits: int,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    **blocks,
+) -> jax.Array:
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel:
+        return _xnor_kernel.xnor_popcount(
+            a_words, w_words, n_bits, interpret=interpret, **blocks
+        )
+    return ref.xnor_popcount_ref(a_words, w_words, n_bits)
+
+
+# ---------------------------------------------------------------------------
+# Fused TM pipelines (the full accelerator datapath)
+# ---------------------------------------------------------------------------
+
+def tm_forward_packed(
+    lit_words: jax.Array,    # (B, W)
+    inc_words: jax.Array,    # (C, W)
+    votes: jax.Array,        # (C, K)
+    nonempty: jax.Array | None = None,  # (C,) uint8; None = training semantics
+    **kw,
+) -> jax.Array:
+    """Packed literals -> (B, K) class sums (HCB chain + adder bank + mask)."""
+    fired = clause_fire(lit_words, inc_words, **kw)
+    if nonempty is not None:
+        fired = fired * nonempty[None, :].astype(fired.dtype)
+    return class_sums(fired, votes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-path TM training step (hash-RNG; matches ref.py bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def feedback_plan(
+    fire: jax.Array,       # (B, C) uint8 training-mode clause outputs
+    y: jax.Array,          # (B,) int32 targets
+    votes: jax.Array,      # (C, K) int32
+    clause_class: jax.Array,   # (C,) int32 class id per clause
+    clause_pol: jax.Array,     # (C,) int32 +1/-1 (0 = padded)
+    threshold: int,
+    seed: jax.Array,       # uint32 scalar
+    b_offset=0,            # global index of fire[0] (chunked training)
+    c_offset=0,            # global index of fire[:, 0] (clause-sharded step)
+    sums: jax.Array | None = None,  # precomputed clamped class sums (B, K)
+):
+    """Compute per-(sample, clause) feedback types: 0 none, 1 Type I, 2 Type II.
+
+    Clause-level randomness uses the same hash RNG as the ta_update kernel so
+    the whole kernel-path training step is reproducible and oracle-testable.
+    """
+    B, C = fire.shape
+    K = votes.shape[1]
+    T = threshold
+    if sums is None:
+        sums = jnp.clip(fire.astype(jnp.int32) @ votes, -T, T)  # (B, K)
+
+    b_idx = jnp.arange(B, dtype=jnp.uint32) + jnp.uint32(b_offset)
+    # negative class: hash-sampled uniformly from the K-1 others
+    r_neg = ref.hash_u32(b_idx, seed ^ jnp.uint32(0x9E3779B9))
+    kn = (r_neg % jnp.uint32(K - 1)).astype(jnp.int32)
+    kn = kn + (kn >= y)
+
+    sum_t = jnp.take_along_axis(sums, y[:, None], axis=1)[:, 0]
+    sum_n = jnp.take_along_axis(sums, kn[:, None], axis=1)[:, 0]
+    p_t = (T - sum_t).astype(jnp.float32) / (2.0 * T)
+    p_n = (T + sum_n).astype(jnp.float32) / (2.0 * T)
+
+    c_idx = (jnp.arange(C, dtype=jnp.uint32) + jnp.uint32(c_offset))[None, :]
+    # hash indexed by global (b, c) via an offset-consistent mixing
+    # (identical for sharded and unsharded callers)
+    r_sel = ref.hash_u32(
+        b_idx[:, None] * jnp.uint32(0x9E3779B1) + c_idx,
+        seed ^ jnp.uint32(0x85EBCA6B),
+    ).astype(jnp.float32) / jnp.float32(2**32)
+
+    is_t = clause_class[None, :] == y[:, None]                 # (B, C)
+    is_n = clause_class[None, :] == kn[:, None]
+    p = jnp.where(is_t, p_t[:, None], jnp.where(is_n, p_n[:, None], 0.0))
+    sel = r_sel < p
+
+    pos = clause_pol[None, :] > 0
+    neg = clause_pol[None, :] < 0
+    ftype = jnp.where(
+        is_t & pos, 1, jnp.where(is_t & neg, 2,
+        jnp.where(is_n & pos, 2, jnp.where(is_n & neg, 1, 0))),
+    )
+    return jnp.where(sel, ftype, 0).astype(jnp.uint8), sums
+
+
+def tm_train_step_kernel(
+    config,
+    ta_state: jax.Array,     # (C, L) int8
+    x: jax.Array,            # (B, F) {0,1}
+    y: jax.Array,            # (B,)
+    seed: jax.Array,         # uint32 scalar
+    batch_chunk: int | None = None,
+    **kw,
+):
+    """Full kernel-path batch training step (clause_fire -> plan -> ta_delta).
+
+    ``batch_chunk`` scans the batch in slices, accumulating the int32 delta —
+    bit-identical to unchunked (the hash RNG is indexed by global sample id)
+    but with O(chunk) working set instead of O(batch).  This is the §Perf
+    memory-term fix for the pod-scale TM training cell.
+    """
+    from repro.core import packetizer, tm
+
+    inc_words = packetizer.pack_include_masks(ta_state)
+    votes = tm.vote_matrix(config)
+    c = jnp.arange(config.n_clauses_total)
+    clause_class = jnp.clip(c // config.clauses_per_class, 0, config.n_classes - 1)
+    pol = tm.polarity(config)
+    p_act = 1.0 if config.boost_true_positive else (config.s - 1.0) / config.s
+
+    def chunk_delta(xc, yc, b_offset):
+        lits = tm.literals(xc)
+        lit_words = packetizer.pack_bits(lits)
+        fire = clause_fire(lit_words, inc_words, **kw).astype(jnp.uint8)
+        ftype, _ = feedback_plan(
+            fire, yc, votes, clause_class, pol, config.threshold, seed,
+            b_offset=b_offset,
+        )
+        return ta_delta(
+            ta_state, lits, fire, ftype, seed,
+            p_act=p_act, p_inact=1.0 / config.s, b_offset=b_offset, **kw,
+        )
+
+    B = x.shape[0]
+    if batch_chunk and B > batch_chunk and B % batch_chunk == 0:
+        n = B // batch_chunk
+        xs = x.reshape(n, batch_chunk, *x.shape[1:])
+        ys = y.reshape(n, batch_chunk)
+
+        def body(acc, inp):
+            i, xc, yc = inp
+            return acc + chunk_delta(xc, yc, i * batch_chunk), None
+
+        delta, _ = jax.lax.scan(
+            body,
+            jnp.zeros(ta_state.shape, jnp.int32),
+            (jnp.arange(n, dtype=jnp.uint32), xs, ys),
+        )
+    else:
+        delta = chunk_delta(x, y, 0)
+    new_ta = jnp.clip(
+        ta_state.astype(jnp.int32) + delta, -config.n_states, config.n_states - 1
+    ).astype(jnp.int8)
+    return new_ta, delta
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: matmul + binomial-aggregation TM training step
+# ---------------------------------------------------------------------------
+
+def _binomial_approx(n: jax.Array, p: float, gidx: jax.Array, seed: jax.Array):
+    """~Binomial(n, p) per element via moment-matched normal (triangular z).
+
+    Exact in mean/variance; the normal approximation error is negligible for
+    the O(batch)-sized counts this path aggregates (and TM training is robust
+    to RNG quality by design — the paper's trainers use LFSRs).
+    """
+    u1 = ref.hash_u32(gidx, seed).astype(jnp.float32) / jnp.float32(2**32)
+    u2 = ref.hash_u32(gidx, seed ^ jnp.uint32(0xC2B2AE35)).astype(jnp.float32) \
+        / jnp.float32(2**32)
+    z = (u1 + u2 - 1.0) * jnp.float32(2.449489742783178)   # sqrt(6): unit var
+    nf = n.astype(jnp.float32)
+    s = nf * p + jnp.sqrt(jnp.maximum(nf * p * (1.0 - p), 0.0)) * z
+    return jnp.clip(jnp.round(s), 0.0, nf).astype(jnp.int32)
+
+
+def tm_train_step_matmul(
+    config,
+    ta_state: jax.Array,     # (C, L) int8
+    x: jax.Array,            # (B, F) {0,1}
+    y: jax.Array,            # (B,)
+    seed: jax.Array,         # uint32 scalar
+    delta_constrain=None,    # optional (C, L) sharding constraint: applied at
+                             # the dot outputs so partial sums reduce-scatter
+):
+    """Batch TM training as three MXU matmuls + (C, L) elementwise sampling.
+
+    Decomposition (boost_true_positive=True):
+      Type I, clause=1, lit=1: deterministic +1  -> A   = M1f^T @ lit
+      Type I penalties (p=1/s):        counts n1 = M1f^T @ (1-lit) + rowsum(M1n)
+                                       draw ~ Binomial(n1, 1/s)
+      Type II (deterministic on excluded, lit=0): n2 = M2^T @ (1-lit)
+    where M1f/M1n/M2 are (B, C) feedback masks.  Memory is O(BC + BL + CL) —
+    no (B, C, L) intermediate exists, and clause evaluation itself is the
+    violation-count matmul (C,L)@(L,B).  Statistically equivalent to the
+    exact per-sample path (matched mean/variance; see tests).
+    """
+    from repro.core import tm
+
+    assert config.boost_true_positive, "matmul path assumes boost (p_act=1)"
+    B = x.shape[0]
+    C, L = ta_state.shape
+    lits = tm.literals(x)                                    # (B, L) uint8
+    lit_f = lits.astype(jnp.bfloat16)
+    inc = (ta_state >= 0).astype(jnp.bfloat16)               # (C, L)
+
+    # clause evaluation as a violation-count matmul (MXU)
+    viol = jax.lax.dot_general(
+        inc, (1.0 - lit_f), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # (C, B)
+    fire = (viol.T < 0.5).astype(jnp.uint8)                  # (B, C)
+
+    votes = tm.vote_matrix(config)
+    c = jnp.arange(config.n_clauses_total)
+    clause_class = jnp.clip(c // config.clauses_per_class, 0, config.n_classes - 1)
+    ftype, _ = feedback_plan(
+        fire, y, votes, clause_class, tm.polarity(config), config.threshold, seed
+    )
+
+    f1 = (ftype == 1)
+    m1f = (f1 & (fire == 1)).astype(jnp.bfloat16)            # (B, C)
+    m1n = (f1 & (fire == 0)).astype(jnp.float32)
+    m2 = ((ftype == 2) & (fire == 1)).astype(jnp.bfloat16)
+
+    def cb_matmul(m_bc, lit_bl):                             # -> (C, L) f32
+        return jax.lax.dot_general(
+            m_bc, lit_bl, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    A = cb_matmul(m1f, lit_f)                                # reward counts
+    n1 = cb_matmul(m1f, 1.0 - lit_f) + jnp.sum(m1n, axis=0)[:, None]
+    n2 = cb_matmul(m2, 1.0 - lit_f)
+    if delta_constrain is not None:
+        A, n1, n2 = map(delta_constrain, (A, n1, n2))
+
+    gidx = (
+        jnp.arange(C, dtype=jnp.uint32)[:, None] * jnp.uint32(L)
+        + jnp.arange(L, dtype=jnp.uint32)[None, :]
+    )
+    pen = _binomial_approx(n1, 1.0 / config.s, gidx, seed ^ jnp.uint32(0x27D4EB2F))
+    excl = (ta_state < 0).astype(jnp.int32)
+    if delta_constrain is not None:
+        excl = delta_constrain(excl)
+    delta = A.astype(jnp.int32) - pen + n2.astype(jnp.int32) * excl
+
+    new_ta = jnp.clip(
+        ta_state.astype(jnp.int32) + delta, -config.n_states, config.n_states - 1
+    ).astype(jnp.int8)
+    return new_ta, delta
+
+
+def tm_train_step_matmul_local(
+    config,
+    ta_loc: jax.Array,     # (C_loc, L_loc) int8 — dual-axis shard
+    x_loc: jax.Array,      # (B_loc, F) {0,1}
+    y_loc: jax.Array,      # (B_loc,)
+    seed: jax.Array,       # uint32 scalar
+):
+    """shard_map body for the matmul TM step on a ("data", "model") mesh.
+
+    Explicit collective schedule (GSPMD's partitioner falls back to a dense
+    all-reduce of the f32 delta here — see EXPERIMENTS.md §Perf):
+      1. all-gather int8 automata over `data`       (C_loc x L, ~31 MB)
+      2. local viol/feedback matmuls (MXU)
+      3. one tiny psum of (B_loc, K) class sums over `model`
+      4. psum_scatter the f32 partial deltas over `data` -> (C_loc, L_loc)
+    """
+    from repro.core import tm
+
+    di = jax.lax.axis_index("data")
+    mi = jax.lax.axis_index("model")
+    n_data = jax.lax.axis_size("data")
+    C_loc, L_loc = ta_loc.shape
+    B_loc = x_loc.shape[0]
+    b_off = di * B_loc
+    c_off = mi * C_loc
+    l_off = di * L_loc
+
+    ta_full = jax.lax.all_gather(ta_loc, "data", axis=1, tiled=True)  # (C_loc, L)
+    lits = tm.literals(x_loc)                                 # (B_loc, L)
+    lit_f = lits.astype(jnp.bfloat16)
+    inc = (ta_full >= 0).astype(jnp.bfloat16)
+
+    viol = jax.lax.dot_general(
+        inc, (1.0 - lit_f), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                         # (C_loc, B_loc)
+    fire = (viol.T < 0.5).astype(jnp.uint8)                   # (B_loc, C_loc)
+
+    votes = tm.vote_matrix(config)                            # (C, K) global
+    votes_loc = jax.lax.dynamic_slice_in_dim(votes, c_off, C_loc, 0)
+    sums = jax.lax.psum(fire.astype(jnp.int32) @ votes_loc, "model")
+    sums = jnp.clip(sums, -config.threshold, config.threshold)
+
+    cc = jnp.clip(
+        jnp.arange(config.n_clauses_total) // config.clauses_per_class,
+        0, config.n_classes - 1,
+    )
+    pol = tm.polarity(config)
+    cc_loc = jax.lax.dynamic_slice_in_dim(cc, c_off, C_loc, 0)
+    pol_loc = jax.lax.dynamic_slice_in_dim(pol, c_off, C_loc, 0)
+    ftype, _ = feedback_plan(
+        fire, y_loc, votes_loc, cc_loc, pol_loc, config.threshold, seed,
+        b_offset=b_off, c_offset=c_off, sums=sums,
+    )
+
+    f1 = (ftype == 1)
+    m1f = (f1 & (fire == 1)).astype(jnp.bfloat16)
+    m1n = (f1 & (fire == 0)).astype(jnp.float32)
+    m2 = ((ftype == 2) & (fire == 1)).astype(jnp.bfloat16)
+
+    def cb(m_bc, lit_bl):
+        return jax.lax.dot_general(
+            m_bc, lit_bl, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    A = cb(m1f, lit_f)                                        # (C_loc, L) partial
+    n1 = cb(m1f, 1.0 - lit_f) + jnp.sum(m1n, axis=0)[:, None]
+    n2 = cb(m2, 1.0 - lit_f)
+    stacked = jnp.stack([A, n1, n2])                          # (3, C_loc, L)
+    stacked = jax.lax.psum_scatter(
+        stacked, "data", scatter_dimension=2, tiled=True
+    )                                                         # (3, C_loc, L_loc)
+    A, n1, n2 = stacked[0], stacked[1], stacked[2]
+
+    L_total = L_loc * n_data
+    gidx = (
+        (jnp.arange(C_loc, dtype=jnp.uint32) + jnp.uint32(c_off))[:, None]
+        * jnp.uint32(L_total)
+        + (jnp.arange(L_loc, dtype=jnp.uint32) + jnp.uint32(l_off))[None, :]
+    )
+    pen = _binomial_approx(n1, 1.0 / config.s, gidx, seed ^ jnp.uint32(0x27D4EB2F))
+    excl = (ta_loc < 0).astype(jnp.int32)
+    delta = jnp.round(A).astype(jnp.int32) - pen + jnp.round(n2).astype(jnp.int32) * excl
+    return jnp.clip(
+        ta_loc.astype(jnp.int32) + delta,
+        -config.n_states, config.n_states - 1,
+    ).astype(jnp.int8)

@@ -1,0 +1,517 @@
+"""Post-SPMD HLO text analysis: per-device FLOPs, HBM bytes, collective bytes.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's cost analysis counts each
+``while`` body ONCE, ignoring ``known_trip_count`` — for scanned-layer models
+that undercounts by the layer count.  This module parses the compiled HLO
+text into computations, costs each op, and resolves the call graph with trip
+multipliers:
+
+  * ``dot``: 2 x result_elems x contraction_size (operand shapes resolved
+    through a per-computation symbol table);
+  * elementwise/copy ops: bytes = operands + result at the top level
+    (fusion internals are free — the fusion op is costed at its boundary,
+    except embedded dots, which are costed through the called computation);
+  * ``while``: (body + condition) x known_trip_count;
+  * collectives: result bytes x op-specific wire multiplier (ring algorithms)
+    summed as *per-device bytes on the busiest link*.
+
+Validated against a known scanned matmul in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "e4m3": 1, "e5m2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+)
+
+# 1-flop-per-element ops we bother counting (the rest round to 0; dots
+# dominate by orders of magnitude)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "tanh", "rsqrt", "sqrt", "log", "negate", "power", "compare", "select",
+    "and", "or", "xor", "not", "convert", "floor", "clamp", "sine", "cosine",
+    "logistic",
+}
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+    tuple_elems: Optional[List["Shape"]] = None
+
+    @property
+    def n_elems(self) -> int:
+        if self.tuple_elems is not None:
+            return sum(t.n_elems for t in self.tuple_elems)
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def n_bytes(self) -> int:
+        if self.tuple_elems is not None:
+            return sum(t.n_bytes for t in self.tuple_elems)
+        return self.n_elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([^\]]*)\]")
+
+
+def parse_shape(s: str) -> Shape:
+    s = s.strip()
+    if s.startswith("("):
+        elems, depth, cur = [], 0, ""
+        for ch in s[1:-1]:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                if cur.strip():
+                    elems.append(parse_shape(cur))
+                cur = ""
+            else:
+                cur += ch
+        if cur.strip():
+            elems.append(parse_shape(cur))
+        return Shape("tuple", (), elems)
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return Shape("opaque", ())
+    dtype, dims_s = m.groups()
+    dims = tuple(
+        int(d.replace("<=", "")) for d in dims_s.split(",") if d.strip()
+    )
+    return Shape(dtype, dims)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: Shape
+    opcode: str
+    operands: List[str]
+    attrs: str
+    args_raw: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.*)$"
+)
+
+
+def _split_type_op(rest: str) -> Optional[Tuple[str, str, str, str]]:
+    """rest = 'TYPE opcode(args), attrs' -> (type, opcode, args, attrs)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                type_s, tail = rest[: i + 1], rest[i + 1 :]
+                break
+        else:
+            return None
+    else:
+        m = re.match(r"^([a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)", rest)
+        if not m:
+            return None
+        type_s, tail = m.group(1), rest[m.end() :]
+    tail = tail.strip()
+    m = re.match(r"^([a-z0-9\-]+)\(", tail)
+    if not m:
+        return None
+    opcode = m.group(1)
+    depth, i = 0, m.end() - 1
+    for j in range(i, len(tail)):
+        depth += tail[j] == "("
+        depth -= tail[j] == ")"
+        if depth == 0:
+            args, attrs = tail[i + 1 : j], tail[j + 1 :]
+            return type_s, opcode, args, attrs
+    return None
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        ls = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$", ls)
+        if header and "=" not in ls.split("(")[0]:
+            cur = Computation(header.group(2), {}, [])
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in ls:
+            continue
+        m = _OP_LINE.match(ls)
+        if not m:
+            continue
+        parsed = _split_type_op(m.group("rest"))
+        if parsed is None:
+            continue
+        type_s, opcode, args, attrs = parsed
+        operands = re.findall(r"%([\w.\-]+)", args)
+        op = Op(m.group("name"), parse_shape(type_s), opcode, operands, attrs, args)
+        cur.ops[op.name] = op
+        cur.order.append(op.name)
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0.0) + v
+        return Cost(
+            self.flops + o.flops, self.bytes + o.bytes,
+            self.coll_bytes + o.coll_bytes, kinds,
+        )
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(
+            self.flops * f, self.bytes * f, self.coll_bytes * f,
+            {k: v * f for k, v in self.coll_by_kind.items()},
+        )
+
+
+def _operand_shape(comp: Computation, name: str) -> Optional[Shape]:
+    op = comp.ops.get(name)
+    return op.shape if op else None
+
+
+def _replica_group_size(attrs: str) -> int:
+    # replica_groups=[32,16]<=[512] -> group size 16 (last dim);
+    # replica_groups={{0,1},{2,3}} -> size of first group
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _collective_wire_bytes(op: Op, comp: Computation) -> float:
+    """Per-device bytes crossing links (ring algorithms)."""
+    g = _replica_group_size(op.attrs)
+    out_b = op.shape.n_bytes
+    kind = op.opcode.replace("-start", "")
+    if kind == "all-gather":
+        return out_b * (g - 1) / max(g, 1)
+    if kind == "all-reduce":
+        return 2.0 * out_b * (g - 1) / max(g, 1)
+    if kind == "reduce-scatter":
+        return out_b * (g - 1)
+    if kind == "all-to-all":
+        return out_b * (g - 1) / max(g, 1)
+    if kind == "collective-permute":
+        return out_b
+    return out_b
+
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    lhs = _operand_shape(comp, op.operands[0]) if op.operands else None
+    contraction = 1
+    if m and lhs is not None and lhs.dims:
+        for d in m.group(1).split(","):
+            if d.strip():
+                contraction *= lhs.dims[int(d)]
+    return 2.0 * op.shape.n_elems * contraction
+
+
+def comp_multiplicities(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """How many times each computation executes per ENTRY run (trip counts)."""
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            if op.opcode == "while":
+                tm = re.search(r"known_trip_count[^0-9]*(\d+)", op.attrs)
+                trip = int(tm.group(1)) if tm else 1
+                for key in ("body", "condition"):
+                    t = re.search(key + r"=%?([\w.\-]+)", op.attrs)
+                    if t:
+                        visit(t.group(1), m * trip)
+            elif op.opcode in ("call", "conditional"):
+                for t in re.findall(r"to_apply=%?([\w.\-]+)", op.attrs):
+                    visit(t, m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def contributions(text: str, top: int = 30):
+    """Per-op HBM-bytes contributions (x execution multiplicity), sorted.
+
+    Debug/profiling aid for the §Perf loop: shows where the memory term
+    actually lives.
+    """
+    comps, entry = parse_hlo(text)
+    full = analyze(text)  # reuses the cost model for fusion/boundary logic
+
+    # rebuild per-op byte costs with multiplicities (mirror of analyze())
+    mult = comp_multiplicities(comps, entry or "")
+    walker = _Walker(comps)
+    rows = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            b = walker.op_bytes(comp, op)
+            f = walker.op_flops(comp, op)
+            if b or f:
+                rows.append(
+                    dict(comp=cname, op=op_name, opcode=op.opcode,
+                         bytes=b * m, flops=f * m, mult=m)
+                )
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:top], full
+
+
+class _Walker:
+    """Per-op cost helpers shared by contributions() (mirrors analyze())."""
+
+    def __init__(self, comps):
+        self.comps = comps
+
+    def op_flops(self, comp, op) -> float:
+        if op.opcode == "dot":
+            return _dot_flops(op, comp)
+        if op.opcode in _ELEMENTWISE:
+            return float(op.shape.n_elems)
+        if op.opcode == "fusion":
+            called = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if called and called.group(1) in self.comps:
+                sub = self.comps[called.group(1)]
+                return sum(self.op_flops(sub, sub.ops[o]) for o in sub.order)
+        return 0.0
+
+    def op_bytes(self, comp, op) -> float:
+        if op.opcode in _FREE_OPS or op.opcode == "while":
+            return 0.0
+        if op.opcode == "fusion":
+            called = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            sub = self.comps.get(called.group(1)) if called else None
+            return _fusion_bytes_standalone(comp, op, sub)
+        return _io_bytes_standalone(comp, op)
+
+
+def analyze(text: str) -> Cost:
+    """Total per-device cost of the ENTRY computation (call graph resolved)."""
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str, flops_only: bool = False) -> Cost:
+        key = name + ("|f" if flops_only else "")
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        memo[key] = total  # break cycles defensively
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            c = Cost()
+            if op.opcode in _FREE_OPS:
+                pass
+            elif op.opcode == "while":
+                m = re.search(r'known_trip_count[^0-9]*(\d+)', op.attrs)
+                trip = int(m.group(1)) if m else 1
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if body:
+                    c = c + comp_cost(body.group(1), flops_only).scaled(trip)
+                if cond:
+                    c = c + comp_cost(cond.group(1), flops_only).scaled(trip)
+            elif op.opcode == "fusion":
+                called = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if called:
+                    c = c + Cost(flops=comp_cost(called.group(1), True).flops)
+                    if not flops_only:
+                        c.bytes += _fusion_bytes(comp, op, comps.get(called.group(1)))
+                elif not flops_only:
+                    c.bytes += _io_bytes(comp, op)
+            elif op.opcode in ("call", "conditional", "async-start", "async-done"):
+                for target in re.findall(
+                    r"(?:to_apply|called_computations=\{|branch_computations=\{)=?%?([\w.\-]+)",
+                    op.attrs,
+                ):
+                    c = c + comp_cost(target, flops_only)
+                if not flops_only:
+                    c.bytes += _io_bytes(comp, op)
+            elif op.opcode.startswith(_COLLECTIVES) or op.opcode in _COLLECTIVES:
+                if not flops_only:
+                    wire = _collective_wire_bytes(op, comp)
+                    c.coll_bytes += wire
+                    kind = op.opcode.replace("-start", "")
+                    c.coll_by_kind = {kind: wire}
+                    c.bytes += _io_bytes(comp, op)
+            else:
+                if op.opcode == "dot":
+                    c.flops += _dot_flops(op, comp)
+                elif op.opcode == "convolution":
+                    c.flops += 2.0 * op.shape.n_elems  # not used by our models
+                elif op.opcode in _ELEMENTWISE:
+                    c.flops += op.shape.n_elems
+                if not flops_only:
+                    c.bytes += _io_bytes(comp, op)
+            total = total + c
+        memo[key] = total
+        return total
+
+    def _fusion_bytes(comp: Computation, op: Op, called: Optional[Computation]) -> float:
+        return _fusion_bytes_standalone(comp, op, called)
+
+    def _io_bytes(comp: Computation, op: Op) -> float:
+        return _io_bytes_standalone(comp, op)
+
+    return comp_cost(entry or "", False)
+
+
+def _fusion_bytes_standalone(
+    comp: Computation, op: Op, called: Optional[Computation]
+) -> float:
+    """HBM traffic of a fusion op, resolved through its interior.
+
+    A fusion parameter consumed *only* by dynamic-slice reads just the
+    slices (scanned-layer weight lookup); a root dynamic-update-slice
+    writes just the update region (in-place aliasing).  Everything else
+    is counted at the boundary.
+    """
+    if called is None:
+        return _io_bytes_standalone(comp, op)
+    # map parameter index -> name, and follow bitcast aliases
+    params = {}
+    alias = {}
+    for o in called.ops.values():
+        if o.opcode == "parameter":
+            try:
+                params[int(o.args_raw.strip())] = o.name
+            except ValueError:
+                pass
+        if o.opcode in ("bitcast", "reshape", "copy") and o.operands:
+            alias[o.name] = o.operands[0]
+
+    def root_name(n):
+        seen = set()
+        while n in alias and n not in seen:
+            seen.add(n)
+            n = alias[n]
+        return n
+
+    uses: Dict[str, List[Op]] = {}
+    for o in called.ops.values():
+        for src in o.operands:
+            uses.setdefault(root_name(src), []).append(o)
+
+    b = 0.0
+    for i, operand in enumerate(op.operands):
+        oshape = _operand_shape(comp, operand)
+        full = oshape.n_bytes if oshape else 0.0
+        pname = params.get(i)
+        if pname is None:
+            b += full
+            continue
+        pus = [
+            u for u in uses.get(pname, [])
+            if u.opcode not in ("bitcast", "reshape", "copy")
+        ]
+        if pus and all(
+            u.opcode == "dynamic-slice" and root_name(u.operands[0]) == pname
+            for u in pus
+        ):
+            b += sum(u.shape.n_bytes for u in pus)
+        else:
+            b += full
+    root = called.ops.get(called.order[-1]) if called.order else None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd = (
+            called.ops.get(root_name(root.operands[1]))
+            if len(root.operands) > 1
+            else None
+        )
+        b += 2.0 * (upd.shape.n_bytes if upd else root.shape.n_bytes)
+    else:
+        b += op.shape.n_bytes
+    return b
+
+
+def _io_bytes_standalone(comp: Computation, op: Op) -> float:
+    # Sliced/in-place ops move only the touched region, not the buffer:
+    # while-loop carries alias in place (XLA buffer donation), so counting
+    # full operands would scale O(layers^2) for scanned models.
+    if op.opcode == "dynamic-slice":
+        return 2.0 * op.shape.n_bytes          # read slice + write result
+    if op.opcode == "dynamic-update-slice":
+        upd = (
+            _operand_shape(comp, op.operands[1])
+            if len(op.operands) > 1
+            else None
+        )
+        return 2.0 * (upd.n_bytes if upd else op.shape.n_bytes)
+    if op.opcode == "gather":
+        return 2.0 * op.shape.n_bytes
+    if op.opcode == "scatter":
+        upd = (
+            _operand_shape(comp, op.operands[2])
+            if len(op.operands) > 2
+            else None
+        )
+        return 2.0 * (upd.n_bytes if upd else op.shape.n_bytes)
+    b = op.shape.n_bytes
+    for o in op.operands:
+        s = _operand_shape(comp, o)
+        if s is not None:
+            b += s.n_bytes
+    return b

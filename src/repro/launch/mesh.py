@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+
+Topology (TPU v5e pods): a pod is a 16x16 chip slice; the single-pod mesh is
+(data=16, model=16); the multi-pod mesh adds a leading ``pod`` axis over the
+DCN/ICI-linked second pod: (pod=2, data=16, model=16) = 512 chips.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over host devices for tests (requires forced device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~4 links/chip; we use 1,
+                                # i.e. the conservative per-collective figure)

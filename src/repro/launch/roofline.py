@@ -1,0 +1,104 @@
+"""Roofline terms from a compiled dry-run cell (TPU v5e targets).
+
+    compute term    t_comp = per_device_FLOPs / peak_FLOP/s
+    memory term     t_mem  = per_device_HBM_bytes / HBM_bw
+    collective term t_coll = per_device_collective_wire_bytes / link_bw
+
+FLOPs/bytes come from launch/hlo_analysis.py (post-SPMD HLO, while-loop trip
+counts resolved — see that module for why cost_analysis() alone is wrong for
+scanned models).  MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D
+(inference) convention with N_active for MoE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.launch import hlo_analysis
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device quantities
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: dict
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    bottleneck: str
+    model_flops_global: float
+    useful_flops_ratio: float
+    # memory analysis (bytes per device)
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    output_bytes: int = 0
+    compile_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape_kind: str, global_batch: int, seq_len: int) -> float:
+    """6·N·D train, 2·N·D prefill, 2·N·B decode (N_active for MoE)."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * global_batch * seq_len
+    if shape_kind == "prefill":
+        return 2.0 * n * global_batch * seq_len
+    return 2.0 * n * global_batch          # decode: one token per sequence
+
+
+def build_report(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    hlo_text: str,
+    model_flops_global: float,
+    mem_analysis=None,
+    compile_seconds: float = 0.0,
+) -> RooflineReport:
+    cost = hlo_analysis.analyze(hlo_text)
+    t_comp = cost.flops / PEAK_FLOPS_BF16
+    t_mem = cost.bytes / HBM_BW
+    t_coll = cost.coll_bytes / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_global / max(cost.flops * n_devices, 1.0)
+
+    kw = {}
+    if mem_analysis is not None:
+        for field, attr in (
+            ("arg_bytes", "argument_size_in_bytes"),
+            ("temp_bytes", "temp_size_in_bytes"),
+            ("output_bytes", "output_size_in_bytes"),
+        ):
+            kw[field] = int(getattr(mem_analysis, attr, 0) or 0)
+
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        flops=cost.flops,
+        hbm_bytes=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        coll_by_kind=dict(cost.coll_by_kind),
+        t_comp=t_comp,
+        t_mem=t_mem,
+        t_coll=t_coll,
+        bottleneck=bottleneck,
+        model_flops_global=model_flops_global,
+        useful_flops_ratio=useful,
+        compile_seconds=compile_seconds,
+        **kw,
+    )

@@ -1,0 +1,112 @@
+"""Serving driver: batched TM inference (the paper's accelerator loop) and
+LM prefill+decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tm-mnist --requests 4096
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke
+
+The TM path mirrors the MATADOR runtime: train -> compile (compiler.py) ->
+packetize requests -> stream through the clause-eval datapath -> argmax,
+reporting throughput the way the paper's jupyter flow does.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def serve_tm(args) -> None:
+    from repro.configs.matador_tm import TM_CONFIGS
+    from repro.core import compiler, packetizer, tm, train
+    from repro.data import make_boolean_classification
+
+    config = TM_CONFIGS[args.arch]
+    X, y = make_boolean_classification(
+        args.n_train, config.n_features, config.n_classes, seed=0
+    )
+    state = tm.init(config, jax.random.PRNGKey(0))
+    state = train.fit(
+        config, state, jnp.asarray(X), jnp.asarray(y),
+        epochs=args.epochs, batch_size=64, rng=jax.random.PRNGKey(1),
+    )
+    compiled = compiler.compile_tm(config, state.ta_state)
+    print("compile stats:", compiled.stats.as_dict())
+
+    Xr, _ = make_boolean_classification(
+        args.requests, config.n_features, config.n_classes, seed=2
+    )
+    xp = packetizer.pack_literals(jnp.asarray(Xr))
+    run = jax.jit(lambda xw: compiler.run_compiled(compiled, xw).argmax(-1))
+    run(xp[:8]).block_until_ready()            # warm
+    t0 = time.perf_counter()
+    preds = run(xp).block_until_ready()
+    dt = time.perf_counter() - t0
+    print(f"{args.requests} inferences in {dt * 1e3:.2f} ms "
+          f"({args.requests / dt:,.0f} inf/s, {dt / args.requests * 1e6:.2f} us/inf)")
+    acc = float((np.asarray(preds) == 0).mean())  # placeholder label-free run
+    _ = acc
+
+
+def serve_lm(args) -> None:
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import steps, transformer
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    B, S_max = args.batch_size, args.seq_len
+    caches = transformer.init_caches(cfg, B, S_max)
+    prefill = jax.jit(steps.make_prefill_step(cfg))
+    decode = jax.jit(steps.make_decode_step(cfg))
+
+    nprng = np.random.default_rng(0)
+    prompt_len = S_max // 2
+    if cfg.frontend == "audio_stub":
+        batch = {"embeds": jnp.asarray(
+            nprng.normal(size=(B, prompt_len, cfg.d_model)), jnp.float32)}
+        mk_inp = lambda tok: {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
+    else:
+        batch = {"tokens": jnp.asarray(
+            nprng.integers(0, cfg.vocab_size, (B, prompt_len)), jnp.int32)}
+        mk_inp = lambda tok: {"tokens": tok}
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch, caches)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+
+    n_new = args.new_tokens
+    t0 = time.perf_counter()
+    for i in range(n_new):
+        logits, caches = decode(params, caches, mk_inp(tok), jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    tok.block_until_ready()
+    t_decode = time.perf_counter() - t0
+    print(f"prefill {prompt_len} tok x {B}: {t_prefill * 1e3:.1f} ms; "
+          f"decode {n_new} steps: {t_decode / n_new * 1e3:.2f} ms/step "
+          f"({B * n_new / t_decode:,.0f} tok/s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--n-train", type=int, default=2000)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.arch.startswith("tm-"):
+        serve_tm(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct input stands-ins for every (arch x shape) dry-run cell.
+
+The assigned input-shape set (LM family):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+  decode_32k   seq 32,768  global_batch 128   -> decode_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     -> decode_step; sub-quadratic
+               archs only (recurrentgemma, xlstm) — full-attention archs are
+               skipped per assignment (noted in DESIGN.md §7).
+
+``[audio]``/``[vlm]`` archs receive precomputed frame/patch embeddings (the
+modality frontend is a stub per assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+    layout: str = "tp"  # "tp" (TP+SP over model) | "dp" (ZeRO-3 pure data)
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    # optimized-layout variant (§Perf): pure data parallelism for small archs
+    "train_4k_dp": ShapeSpec("train_4k_dp", 4096, 256, "train", layout="dp"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Batch / input ShapeDtypeStructs for the given cell (no allocation)."""
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    d = cfg.d_model
+    act = jnp.dtype(cfg.dtype)
+
+    if sp.kind == "train":
+        if cfg.frontend == "audio_stub":
+            return {
+                "embeds": _sds((B, S, d), act),
+                "labels": _sds((B, S, cfg.n_codebooks), jnp.int32),
+            }
+        if cfg.frontend == "vision_stub":
+            s_img = S // 4
+            return {
+                "embeds": _sds((B, s_img, d), act),
+                "tokens": _sds((B, S - s_img), jnp.int32),
+                "labels": _sds((B, S - s_img), jnp.int32),
+            }
+        return {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+
+    if sp.kind == "prefill":
+        if cfg.frontend == "audio_stub":
+            return {"embeds": _sds((B, S, d), act)}
+        if cfg.frontend == "vision_stub":
+            s_img = S // 4
+            return {
+                "embeds": _sds((B, s_img, d), act),
+                "tokens": _sds((B, S - s_img), jnp.int32),
+            }
+        return {"tokens": _sds((B, S), jnp.int32)}
+
+    # decode: one new token against a seq_len-deep cache
+    if cfg.frontend == "audio_stub":
+        return {"embeds": _sds((B, 1, d), act)}
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def cache_specs_struct(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct tree for the decode/prefill caches of this cell."""
+    sp = SHAPES[shape_name]
+    return jax.eval_shape(
+        functools.partial(
+            transformer.init_caches, cfg, sp.global_batch, sp.seq_len
+        )
+    )
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg), jax.random.PRNGKey(0)
+    )

@@ -1,0 +1,405 @@
+"""Attention: GQA (+ qk-norm, RoPE, local windows), flash-style chunked
+softmax for train/prefill, dense single-step for decode.
+
+The chunked path is pure jnp (lax.scan with online-softmax accumulators) so
+it lowers/partitions under GSPMD for the dry-run; on real TPU it is the
+shape XLA pattern-matches well, and a Pallas flash kernel can drop in behind
+the same signature.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def init_attention(rng, cfg: ModelConfig, dtype) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    r = jax.random.split(rng, 4)
+    p = {
+        "wq": layers.init_dense(r[0], d, H * hd, dtype).reshape(d, H, hd),
+        "wk": layers.init_dense(r[1], d, K * hd, dtype).reshape(d, K, hd),
+        "wv": layers.init_dense(r[2], d, K * hd, dtype).reshape(d, K, hd),
+        "wo": layers.init_dense(r[3], H * hd, d, dtype).reshape(H, hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qk_normalize(cfg: ModelConfig, params: dict, q, k):
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def _project_qkv(cfg, params, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q, k = _qk_normalize(cfg, params, q, k)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(x: jax.Array, H: int) -> jax.Array:
+    """(B, T, K, d) -> (B, T, H, d) by repeating each kv head H//K times.
+
+    Sharding rationale: GSPMD cannot shard the grouped (K, G) reshape of q
+    over a single mesh axis, which replicates the score tensors; expanding kv
+    to the full head axis keeps everything sharded over ``model`` (the repeat
+    fuses into the following dot, so no extra HBM traffic materializes).
+    """
+    K = x.shape[2]
+    if K == H:
+        return x
+    return jnp.repeat(x, H // K, axis=2)
+
+
+def _chunks(x, n, size):
+    """(B, S, ...) -> (n, B, size, ...) leading-chunk layout for lax.scan."""
+    B = x.shape[0]
+    return x.reshape((B, n, size) + x.shape[2:]).swapaxes(0, 1)
+
+
+def _unchunks(x):
+    """(n, B, size, ...) -> (B, n*size, ...)."""
+    n, B, size = x.shape[:3]
+    return x.swapaxes(0, 1).reshape((B, n * size) + x.shape[3:])
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, window, q_chunk, kv_chunk):
+    """Returns (out (B,S,H,dv), lse (B,S,H)) — online-softmax tiles."""
+    B, S, H, hd = q.shape
+    T, dv = k.shape[1], v.shape[-1]
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = hd**-0.5
+    qs, qp = _chunks(q, nq, q_chunk), _chunks(q_pos, nq, q_chunk)
+    ks, kp = _chunks(k, nk, kv_chunk), _chunks(kv_pos, nk, kv_chunk)
+    vs = _chunks(v, nk, kv_chunk)
+
+    def q_body(_, q_in):
+        qc, qpc = q_in
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            kc, vc, kpc = kv_in
+            s = jnp.einsum(
+                "bqhd,bthd->bqht", qc.astype(jnp.float32), kc.astype(jnp.float32)
+            ) * scale
+            mask = kpc[:, None, :] <= qpc[:, :, None]
+            if window:
+                mask &= kpc[:, None, :] > qpc[:, :, None] - window
+            s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqht,bthv->bqhv", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, q_chunk, H), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, H), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, H, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kp))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (qs, qp))
+    return _unchunks(outs).astype(q.dtype), _unchunks(lses)
+
+
+def _flash_tile_p(qc, kc, qpc, kpc, lse_c, scale, window):
+    """Recompute the (q_chunk x kv_chunk) probability tile in the backward."""
+    s = jnp.einsum(
+        "bqhd,bthd->bqht", qc.astype(jnp.float32), kc.astype(jnp.float32)
+    ) * scale
+    mask = kpc[:, None, :] <= qpc[:, :, None]
+    if window:
+        mask &= kpc[:, None, :] > qpc[:, :, None] - window
+    p = jnp.exp(s - lse_c[..., None])
+    return jnp.where(mask[:, :, None, :], p, 0.0)            # (B,q,H,t)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_custom(window: int, q_chunk: int, kv_chunk: int):
+    """Flash attention with a recomputing custom VJP.
+
+    Residuals are only (q, k, v, positions, out, lse): the backward pass
+    re-derives each probability tile — O(S) memory instead of the O(S^2)
+    score matrices jax would otherwise stash for the scan backward (this is
+    what made the naive train_4k dry-run need 39 GB/device of temps).
+    """
+
+    @jax.custom_vjp
+    def flash(q, k, v, q_pos, kv_pos):
+        # On TPU, plain causal attention dispatches to the Pallas kernel
+        # (VMEM-resident tiles — kernels/flash_attention.py); the XLA path
+        # below is the oracle/partitioning fallback and the CPU engine.
+        if (
+            jax.default_backend() == "tpu"
+            and window == 0
+            and q.shape[1] == k.shape[1]
+        ):
+            from repro.kernels.flash_attention import flash_forward
+
+            return flash_forward(q, k, v, causal=True)
+        out, _ = _flash_fwd(q, k, v, q_pos, kv_pos, window, q_chunk, kv_chunk)
+        return out
+
+    def fwd(q, k, v, q_pos, kv_pos):
+        out, lse = _flash_fwd(q, k, v, q_pos, kv_pos, window, q_chunk, kv_chunk)
+        return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+    def bwd(res, do):
+        q, k, v, q_pos, kv_pos, out, lse = res
+        B, S, H, hd = q.shape
+        T, dv = k.shape[1], v.shape[-1]
+        nq, nk = S // q_chunk, T // kv_chunk
+        scale = hd**-0.5
+        delta = jnp.sum(
+            do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+        )                                                     # (B,S,H)
+
+        qs, qp = _chunks(q, nq, q_chunk), _chunks(q_pos, nq, q_chunk)
+        ks, kp = _chunks(k, nk, kv_chunk), _chunks(kv_pos, nk, kv_chunk)
+        vs = _chunks(v, nk, kv_chunk)
+        dos, lses = _chunks(do, nq, q_chunk), _chunks(lse, nq, q_chunk)
+        deltas = _chunks(delta, nq, q_chunk)
+
+        # pass A: dq (scan q tiles; reduce over kv tiles)
+        def dq_body(_, q_in):
+            qc, qpc, doc, lse_c, dc = q_in
+
+            def inner(dq_acc, kv_in):
+                kc, vc, kpc = kv_in
+                p = _flash_tile_p(qc, kc, qpc, kpc, lse_c, scale, window)
+                dp = jnp.einsum(
+                    "bqhv,bthv->bqht", doc.astype(jnp.float32), vc.astype(jnp.float32)
+                )
+                ds = p * (dp - dc[..., None])
+                dq_acc += jnp.einsum(
+                    "bqht,bthd->bqhd", ds.astype(kc.dtype), kc
+                ).astype(jnp.float32) * scale
+                return dq_acc, None
+
+            dq0 = jnp.zeros((B, q_chunk, H, hd), jnp.float32)
+            dq_c, _ = jax.lax.scan(inner, dq0, (ks, vs, kp))
+            return None, dq_c
+
+        _, dqs = jax.lax.scan(dq_body, None, (qs, qp, dos, lses, deltas))
+
+        # pass B: dk, dv (scan kv tiles; reduce over q tiles)
+        def dkv_body(_, kv_in):
+            kc, vc, kpc = kv_in
+
+            def inner(carry, q_in):
+                dk_acc, dv_acc = carry
+                qc, qpc, doc, lse_c, dc = q_in
+                p = _flash_tile_p(qc, kc, qpc, kpc, lse_c, scale, window)
+                dv_acc += jnp.einsum(
+                    "bqht,bqhv->bthv", p.astype(doc.dtype), doc
+                ).astype(jnp.float32)
+                dp = jnp.einsum(
+                    "bqhv,bthv->bqht", doc.astype(jnp.float32), vc.astype(jnp.float32)
+                )
+                ds = p * (dp - dc[..., None])
+                dk_acc += jnp.einsum(
+                    "bqht,bqhd->bthd", ds.astype(qc.dtype), qc
+                ).astype(jnp.float32) * scale
+                return (dk_acc, dv_acc), None
+
+            z = (
+                jnp.zeros((B, kv_chunk, H, hd), jnp.float32),
+                jnp.zeros((B, kv_chunk, H, dv), jnp.float32),
+            )
+            (dk_c, dv_c), _ = jax.lax.scan(inner, z, (qs, qp, dos, lses, deltas))
+            return None, (dk_c, dv_c)
+
+        _, (dks, dvs) = jax.lax.scan(dkv_body, None, (ks, vs, kp))
+
+        dq = _unchunks(dqs).astype(q.dtype)
+        dk = _unchunks(dks).astype(k.dtype)
+        dv = _unchunks(dvs).astype(v.dtype)
+        import numpy as _np
+
+        f0 = lambda x: _np.zeros(x.shape, jax.dtypes.float0)
+        return dq, dk, dv, f0(q_pos), f0(kv_pos)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention(
+    q: jax.Array,            # (B, S, H, hd)
+    k: jax.Array,            # (B, T, K, hd), K divides H
+    v: jax.Array,            # (B, T, K, dv)
+    q_pos: jax.Array,        # (B, S)
+    kv_pos: jax.Array,       # (B, T)
+    *,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Causal (optionally windowed) attention, online softmax, O(S) memory
+    in both directions (recomputing custom VJP)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    while S % q_chunk:
+        q_chunk //= 2
+    while T % kv_chunk:
+        kv_chunk //= 2
+    return _flash_custom(window, q_chunk, kv_chunk)(q, k, v, q_pos, kv_pos)
+
+
+def constrain_heads(ctx, t: jax.Array) -> jax.Array:
+    """Pin (B, S, H, hd) attention activations to a shardable layout.
+
+    Heads over ``model`` when they divide it.  When they don't (10/15/36
+    heads on 16-way TP), shard the *sequence* instead — context-parallel
+    attention: every score tile is then fully local and kv is a small
+    all-gather.  The previously-tried head_dim fallback turns every flash
+    tile into a partial-sum all-reduce (measured 1.3 TB of collective
+    traffic on recurrentgemma prefill_32k — EXPERIMENTS.md §Perf).
+    Decode (S == 1) falls back to replicated — its tensors are tiny and the
+    KV cache is already sequence-sharded by models/sharding.py.
+    """
+    if ctx is None or ctx.mesh is None or t.ndim != 4:
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    if getattr(ctx, "pure_dp", False):
+        return ctx.constrain(t, P(ctx.dp_axes, None, None, None))
+    size = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get("model", 1)
+    if t.shape[2] % size == 0:
+        spec = P(ctx.dp_axes, None, "model", None)
+    elif t.shape[1] % size == 0 and t.shape[1] > 1:
+        spec = P(ctx.dp_axes, "model", None, None)
+    else:
+        spec = P(ctx.dp_axes, None, None, None)
+    return ctx.constrain(t, spec)
+
+
+def attention_block(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,             # (B, S, d)
+    positions: jax.Array,     # (B, S)
+    *,
+    kind: str,                # "attn" | "local"
+    cache: Optional[dict] = None,
+    ctx=None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention with optional KV cache (decode/prefill)."""
+    window = cfg.window if kind == "local" else 0
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    q = constrain_heads(ctx, q)
+
+    if cache is None:
+        k = constrain_heads(ctx, _expand_kv(k, cfg.n_heads))
+        v = constrain_heads(ctx, _expand_kv(v, cfg.n_heads))
+        out = flash_attention(q, k, v, positions, positions, window=window)
+        out = constrain_heads(ctx, out)
+        new_cache = None
+    elif "kv_pos" in cache:
+        out, new_cache = _ring_cache_attention(
+            cfg, params, q, k, v, positions, window, cache
+        )
+    else:
+        S_max = cache["k"].shape[1]
+        pos = cache["pos"]                                 # int32 scalar
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+        if x.shape[1] == 1:  # decode: dense single-query attention
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(S_max, dtype=positions.dtype)[None, :],
+                (x.shape[0], S_max),
+            )
+            out = _decode_attention(cfg, q, ck, cv, positions, kv_pos, window)
+        else:                # prefill through cache
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(S_max, dtype=positions.dtype)[None, :],
+                (x.shape[0], S_max),
+            )
+            valid = kv_pos[:, :] < (pos + x.shape[1])
+            kv_pos = jnp.where(valid, kv_pos, jnp.int32(2**30))  # mask empties
+            out = flash_attention(q, ck, cv, positions, kv_pos, window=window)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def _ring_cache_attention(cfg, params, q, k, v, positions, window, cache):
+    """Sliding-window ring-buffer KV cache (slot = position % ring).
+
+    Prefill is assumed to start at position 0 (the framework's serving flow);
+    a windowed prefill never needs context older than the window anyway.
+    """
+    B, S = q.shape[0], q.shape[1]
+    ring = cache["k"].shape[1]
+    pos = cache["pos"]
+    if S == 1:  # decode
+        slot = pos % ring
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        kv_pos = jax.lax.dynamic_update_slice(
+            cache["kv_pos"], jnp.broadcast_to(pos, (B, 1)), (0, slot)
+        )
+        out = _decode_attention(cfg, q, ck, cv, positions, kv_pos, window)
+    else:       # prefill from 0: full windowed flash, then fill the ring
+        out = flash_attention(q, k, v, positions, positions, window=window)
+        r = min(S, ring)
+        idx = (pos + S - r + jnp.arange(r)) % ring
+        ck = cache["k"].at[:, idx].set(k[:, -r:])
+        cv = cache["v"].at[:, idx].set(v[:, -r:])
+        kv_pos = cache["kv_pos"].at[:, idx].set(positions[:, -r:])
+    new_cache = {"k": ck, "v": cv, "kv_pos": kv_pos, "pos": pos + S}
+    return out, new_cache
+
+
+def _decode_attention(cfg, q, k, v, positions, kv_pos, window):
+    """q: (B, 1, H, hd) against a cache (B, T, K, hd) with explicit kv_pos."""
+    B, _, H, hd = q.shape
+    T = k.shape[1]
+    dv = v.shape[-1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum(
+        "bhd,bthd->bht", q[:, 0].astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd**-0.5)                                         # (B,H,T)
+    mask = (kv_pos >= 0) & (kv_pos <= positions[:, :1])    # (B,T)
+    if window:
+        mask &= kv_pos > positions[:, :1] - window
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bht,bthv->bhv", p.astype(v.dtype), v)
+    return out.reshape(B, 1, H, dv).astype(q.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> dict:
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s_max, K, hd), dtype),
+        "v": jnp.zeros((batch, s_max, K, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

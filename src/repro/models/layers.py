@@ -1,0 +1,97 @@
+"""Shared LM building blocks: norms, RoPE, SwiGLU, embeddings, fused CE loss."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_dense(rng, d_in: int, d_out: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * (d_in**-0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FF
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {
+        "up": init_dense(r2, d_model, d_ff, dtype),
+        "down": init_dense(r3, d_ff, d_model, dtype),
+    }
+    if gated:
+        p["gate"] = init_dense(r1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    if "gate" in params:  # SwiGLU
+        g = jax.nn.silu(x @ params["gate"])
+        return (g * (x @ params["up"])) @ params["down"]
+    return jax.nn.gelu(x @ params["up"]) @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Fused (chunked) softmax cross-entropy: never materializes full-seq logits
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(
+    x: jax.Array,           # (B, S, d) final hidden states
+    w_unembed: jax.Array,   # (d, V)
+    labels: jax.Array,      # (B, S) int32, -1 = masked
+    n_chunks: int = 8,
+) -> jax.Array:
+    """Mean CE over unmasked positions, computing logits chunk-by-chunk."""
+    B, S, d = x.shape
+    while S % n_chunks:
+        n_chunks //= 2
+    xs = x.reshape(B, n_chunks, S // n_chunks, d).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, lc = inp
+        logits = (xc @ w_unembed).astype(jnp.float32)          # (B, s, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - tgt) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2): low-rank compressed KV cache.
+
+The KV cache stores only the kv_lora-dim latent + the shared rope key
+(kv_lora + rope_head_dim per token, vs 2*K*hd for GQA) — the arch's defining
+serving optimization, reflected directly in the dry-run memory analysis.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import NEG_INF, flash_attention
+from repro.models.config import ModelConfig
+
+
+def init_mla(rng, cfg: ModelConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope_d = cfg.resolved_head_dim, cfg.rope_head_dim
+    vd = cfg.v_head_dim or nope
+    r = jax.random.split(rng, 8)
+    p = {
+        # queries (optionally low-rank)
+        "wq_a": layers.init_dense(r[0], d, cfg.q_lora, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora,), dtype),
+        "wq_b": layers.init_dense(r[1], cfg.q_lora, H * (nope + rope_d), dtype)
+        .reshape(cfg.q_lora, H, nope + rope_d),
+        # compressed kv latent + shared rope key
+        "wkv_a": layers.init_dense(r[2], d, cfg.kv_lora + rope_d, dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora,), dtype),
+        "wk_b": layers.init_dense(r[3], cfg.kv_lora, H * nope, dtype)
+        .reshape(cfg.kv_lora, H, nope),
+        "wv_b": layers.init_dense(r[4], cfg.kv_lora, H * vd, dtype)
+        .reshape(cfg.kv_lora, H, vd),
+        "wo": layers.init_dense(r[5], H * vd, d, dtype).reshape(H, vd, d),
+    }
+    return p
+
+
+def _mla_qkv(cfg: ModelConfig, params, x, positions):
+    nope, rope_d = cfg.resolved_head_dim, cfg.rope_head_dim
+    q_lat = layers.rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]                                  # (B,S,kv_lora+rope)
+    c_kv = layers.rms_norm(kv[..., : cfg.kv_lora], params["kv_norm"], cfg.norm_eps)
+    k_rope = layers.apply_rope(
+        kv[..., cfg.kv_lora :][:, :, None, :], positions, cfg.rope_theta
+    )                                                          # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _expand_kv(cfg, params, c_kv, k_rope):
+    """Latent -> per-head K/V (B,S,H,nope+rope) and (B,S,H,vd)."""
+    nope = cfg.resolved_head_dim
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+    H = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, k_rope.shape[-1]))],
+        axis=-1,
+    )
+    return k, v
+
+
+def mla_block(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    ctx=None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    from repro.models.attention import constrain_heads
+
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, positions)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)            # (B,S,H,nope+rope)
+    q = constrain_heads(ctx, q)
+
+    if cache is None:
+        k, v = _expand_kv(cfg, params, c_kv, k_rope)
+        k = constrain_heads(ctx, k)
+        v = constrain_heads(ctx, v)
+        out = flash_attention(q, k, v, positions, positions)
+    else:
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :], (0, pos, 0)
+        )
+        cache = {"c_kv": cc, "k_rope": cr, "pos": pos + x.shape[1]}
+        if x.shape[1] == 1:
+            out = _mla_decode(cfg, params, q, cc, cr, positions)
+        else:
+            k, v = _expand_kv(cfg, params, cc, cr[:, :, None, :])
+            S_max = cc.shape[1]
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(S_max, dtype=positions.dtype)[None, :],
+                (x.shape[0], S_max),
+            )
+            kv_pos = jnp.where(kv_pos < pos + x.shape[1], kv_pos, jnp.int32(2**30))
+            out = flash_attention(q, k, v, positions, kv_pos)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, cache
+
+
+def _mla_decode(cfg, params, q, c_kv, k_rope, positions):
+    """Latent-space decode: absorb wk_b/wv_b into the query/output so the
+    (B, T, kv_lora) cache is attended directly (no per-head K/V expansion)."""
+    nope = cfg.resolved_head_dim
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    # absorb k up-projection: q_lat[b,h,r] = sum_k q_nope[b,1,h,k] wk_b[r,h,k]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])[:, 0]
+    s = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32))
+    s += jnp.einsum(
+        "bshk,btk->bht", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+    )
+    s *= (nope + cfg.rope_head_dim) ** -0.5
+    T = c_kv.shape[1]
+    mask = jnp.arange(T, dtype=positions.dtype)[None, :] <= positions[:, :1]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", p, c_kv.astype(jnp.float32))  # (B,H,r)
+    out = jnp.einsum("bhr,rhk->bhk", o_lat, params["wv_b"].astype(jnp.float32))
+    return out[:, None].astype(q.dtype)                       # (B,1,H,vd)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, s_max, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, s_max, cfg.rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

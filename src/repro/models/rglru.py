@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Real-Gated Linear Recurrent Unit: diagonal recurrence
+    a_t = exp(-c * softplus(Lambda) * r_t),     c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+with input/recurrence gates r_t, i_t = sigmoid(linear(u_t)).  Training and
+prefill use ``jax.lax.associative_scan`` over the sequence (log-depth,
+sub-quadratic — this arch runs the ``long_500k`` cell); decode carries
+(h, conv) state.  Block = gated branch merge as in Griffin:
+    out = W_out( gelu(W_gate x) * RG-LRU(conv4(W_x x)) ).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+_C = 8.0
+
+
+def init_rglru(rng, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    r = jax.random.split(rng, 6)
+    # Lambda init so a ~ U[0.9, 0.999] at r=1 (Griffin appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C))
+    return {
+        "wx": layers.init_dense(r[0], d, w, dtype),
+        "wgate": layers.init_dense(r[1], d, w, dtype),
+        "conv": (jax.random.normal(r[2], (cfg.conv_width, w)) * 0.1).astype(dtype),
+        "w_r": layers.init_dense(r[3], w, w, dtype),
+        "w_i": layers.init_dense(r[4], w, w, dtype),
+        "lam": lam.astype(jnp.float32),
+        "wout": layers.init_dense(r[5], w, d, dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv, width cw. u: (B,S,w); state: (B,cw-1,w)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)                 # (B, S+cw-1, w)
+    out = sum(
+        full[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(cw)
+    )
+    new_state = full[:, -(cw - 1) :, :] if cw > 1 else None
+    return out, new_state
+
+
+def _rglru_gates(params, u):
+    r = jax.nn.sigmoid((u @ params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # (B,S,w) f32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_block(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,             # (B, S, d)
+    *,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    gate = jax.nn.gelu(x @ params["wgate"])
+    u = x @ params["wx"]
+    u, conv_state = _causal_conv(
+        u, params["conv"], cache["conv"] if cache is not None else None
+    )
+    a, b = _rglru_gates(params, u)
+
+    S = x.shape[1]
+    if cache is None or S > 1:
+        # h_t = a_t h_{t-1} + b_t  via associative scan over seq; a cached
+        # initial state folds into the first step's offset term.
+        if cache is not None:
+            b = b.at[:, 0, :].add(a[:, 0, :] * cache["h"])
+
+        def combine(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+        if cache is not None:  # prefill-through-cache
+            new_cache = {
+                "h": h[:, -1, :], "conv": conv_state, "pos": cache["pos"] + S
+            }
+    else:
+        h = a[:, 0] * cache["h"] + b[:, 0]                    # decode step
+        new_cache = {"h": h, "conv": conv_state, "pos": cache["pos"] + 1}
+        h = h[:, None, :]
+
+    out = (gate * h.astype(gate.dtype)) @ params["wout"]
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

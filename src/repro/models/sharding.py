@@ -1,0 +1,241 @@
+"""Partitioning rules: param/optimizer/cache/batch PartitionSpecs per arch.
+
+Name-based rules (MaxText-style logical axes, resolved against the physical
+mesh with divisibility fallbacks):
+  * tensor parallelism over ``model``: attention heads, d_ff, vocab,
+    MoE expert dim, recurrent width;
+  * FSDP over ``data`` in train mode (the non-TP dim of every large matrix);
+  * batch over (``pod``, ``data``); KV caches heads-then-head_dim over
+    ``model`` with sequence-over-``data`` fallback for batch=1 serving.
+
+Every spec is validated for divisibility against the actual mesh; an axis
+that does not divide is dropped (replicated) rather than failing — small
+models on big meshes lower cleanly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from repro.models.config import ModelConfig
+
+
+def axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
+def _fit(spec_axes, dim: int, sizes: dict):
+    """Return spec entry if dim divides the (product of) mesh axes, else None."""
+    if spec_axes is None:
+        return None
+    axes = spec_axes if isinstance(spec_axes, tuple) else (spec_axes,)
+    axes = tuple(a for a in axes if a in sizes)
+    if not axes:
+        return None
+    total = int(np.prod([sizes[a] for a in axes]))
+    if total == 0 or dim % total != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _mk(sizes: dict, shape, *axes) -> P:
+    assert len(axes) == len(shape), (axes, shape)
+    return P(*[_fit(a, d, sizes) for a, d in zip(axes, shape)])
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, DictKey):
+            return str(entry.key)
+        if isinstance(entry, GetAttrKey):
+            return entry.name
+    return ""
+
+
+def _in_groups(path) -> bool:
+    return any(isinstance(e, DictKey) and e.key == "groups" for e in path)
+
+
+_REPLICATED = {
+    "norm1", "norm2", "final_norm", "q_norm", "k_norm", "kv_norm",
+    "out_norm", "router", "pos", "steps",
+}
+
+
+def _param_rule(cfg: ModelConfig, name: str, shape, fsdp, sizes) -> P:
+    nd = len(shape)
+    if name in _REPLICATED or nd == 0:
+        return P(*([None] * nd))
+    if name == "embed":
+        return _mk(sizes, shape, "model", fsdp)
+    if name == "unembed":
+        return _mk(sizes, shape, fsdp, "model")
+    if name == "lam":
+        return _mk(sizes, shape, "model")
+    # attention: shard the (expanded) head axis; when n_heads does not divide
+    # the model axis (36 or 15 heads on 16-way TP), shard head_dim instead so
+    # q and kv stay contraction-consistent.  GQA kv with K < model axis is
+    # replicated (cheap) and sharded post-expansion.
+    heads_ok = _fit("model", cfg.n_heads, sizes) is not None
+    if name in ("wq", "wk", "wv") and nd == 3 and shape[0] not in (cfg.n_heads,):
+        if heads_ok:
+            return _mk(sizes, shape, fsdp, "model", None)
+        return _mk(sizes, shape, fsdp, None, "model")
+    if name == "wo":
+        if heads_ok:
+            return _mk(sizes, shape, "model", None, fsdp)
+        # non-divisible heads: replicate wo (small) — an hd-sharded wo makes
+        # the output projection a (B, S, d) partial-sum all-reduce per layer
+        return _mk(sizes, shape, None, None, fsdp)
+    # mla
+    if name == "wq_a":
+        return _mk(sizes, shape, fsdp, "model")
+    if name == "wq_b":
+        return _mk(sizes, shape, None, "model", None)
+    if name == "wkv_a":
+        return _mk(sizes, shape, fsdp, None)
+    if name in ("wk_b", "wv_b"):
+        return _mk(sizes, shape, None, "model", None)
+    # MoE expert banks (E, d, fe) / (E, fe, d) — expert-parallel over model,
+    # ZeRO-3 over data (the shard_map in_specs re-gather at use)
+    if name in ("gate", "up", "down") and nd == 3:
+        return _mk(sizes, shape, "model", fsdp, None)
+    # dense mlp
+    if name in ("gate", "up"):
+        return _mk(sizes, shape, fsdp, "model")
+    if name == "down":
+        return _mk(sizes, shape, "model", fsdp)
+    # rglru
+    if name in ("wx", "wgate"):
+        return _mk(sizes, shape, fsdp, "model")
+    if name == "conv":
+        return _mk(sizes, shape, None, "model")
+    if name in ("w_r", "w_i") and nd == 2 and shape[0] == shape[1]:
+        return _mk(sizes, shape, None, "model")
+    if name == "wout":
+        return _mk(sizes, shape, "model", fsdp)
+    # mlstm / slstm
+    if name in ("w_up", "w_gate"):
+        return _mk(sizes, shape, fsdp, "model")
+    if name in ("wq", "wk", "wv") and nd == 3:        # (H, dh, dh) block-diag
+        return _mk(sizes, shape, None, None, "model")
+    if name in ("w_f", "w_i") and nd == 2:
+        return _mk(sizes, shape, "model", None)
+    if name == "w_down":
+        return _mk(sizes, shape, "model", fsdp)
+    if name in ("w_z", "w_o") or (name.startswith("w_") and nd == 2):
+        return _mk(sizes, shape, fsdp, "model")
+    if name.startswith("r_") and nd == 3:
+        return _mk(sizes, shape, None, None, "model")
+    if name == "w_out":
+        return _mk(sizes, shape, "model", fsdp)
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh: Mesh, *, train: bool,
+                pure_dp: bool = False):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays).
+
+    ``pure_dp``: drop all tensor-parallel ("model") placements — params are
+    ZeRO-sharded over ``data`` only and gathered at use (small models whose
+    batch covers the mesh)."""
+    sizes = axis_sizes(mesh)
+    fsdp = "data" if train else None
+
+    def strip_model(spec):
+        return P(*[
+            None if a == "model" else a
+            for a in (tuple(spec) + (None,) * 8)[: len(spec)]
+        ])
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = tuple(leaf.shape)
+        if _in_groups(path) and shape:
+            spec = _param_rule(cfg, name, shape[1:], fsdp, sizes)
+            spec = strip_model(spec) if pure_dp else spec
+            return P(*((None,) + tuple(spec)))
+        spec = _param_rule(cfg, name, shape, fsdp, sizes)
+        return strip_model(spec) if pure_dp else spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def _cache_rule(cfg: ModelConfig, name: str, shape, dp, sizes) -> P:
+    nd = len(shape)
+    if name == "pos" or nd == 0:
+        return P(*([None] * nd))
+    b_ok = _fit(dp, shape[0], sizes) is not None if nd else False
+    bspec = dp if b_ok else None
+    # sequence axis of attention caches: absorbs the data axes when batch=1
+    # (long-context serving) and the model axis when kv heads don't divide it
+    # (decode attention over a seq-sharded cache needs only tiny softmax-stat
+    # collectives, vs. huge score psums for head_dim-sharded contraction).
+    def seq_axes(head_shardable: bool):
+        ax = [] if b_ok else list(dp)
+        if not head_shardable:
+            ax.append("model")
+        return tuple(ax) if ax else None
+
+    if name in ("k", "v") and nd == 4:                 # (B, S, K, hd)
+        k_ok = _fit("model", shape[2], sizes) is not None
+        return _mk(
+            sizes, shape, bspec, seq_axes(k_ok), "model" if k_ok else None, None
+        )
+    if name == "kv_pos":
+        return _mk(sizes, shape, bspec, seq_axes(False))
+    if name == "c_kv":                                  # (B, S, kv_lora)
+        return _mk(sizes, shape, bspec, seq_axes(False), None)
+    if name == "k_rope":
+        return _mk(sizes, shape, bspec, seq_axes(False), None)
+    if name == "h" and nd == 2:                         # rglru (B, w)
+        return _mk(sizes, shape, bspec, "model")
+    if name == "conv" and nd == 3:
+        return _mk(sizes, shape, bspec, None, "model")
+    if name == "S" and nd == 4:                         # mlstm (B,H,dk,dv)
+        return _mk(sizes, shape, bspec, None, None, "model")
+    if name == "n" and nd == 3:
+        return _mk(sizes, shape, bspec, None, None)
+    if name in ("c", "h", "m") and nd == 3:             # slstm (B,H,dh)
+        return _mk(sizes, shape, bspec, None, "model")
+    return P(*([None] * nd))
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh):
+    sizes = axis_sizes(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = tuple(leaf.shape)
+        if shape:  # caches are scan-stacked: leading repeats dim
+            spec = _cache_rule(cfg, name, shape[1:], dp, sizes)
+            return P(*((None,) + tuple(spec)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def batch_specs(cfg: ModelConfig, batch_tree, mesh: Mesh, *, pure_dp: bool = False):
+    sizes = axis_sizes(mesh)
+    axes = ("pod", "data", "model") if pure_dp else ("pod", "data")
+    dp = tuple(a for a in axes if a in sizes)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        rest = [None] * (len(shape) - 1)
+        return P(_fit(dp, shape[0], sizes), *rest)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,111 @@
+"""Step builders: train / prefill / decode, mesh-aware.
+
+These are the functions the launcher jits (and the dry-run lowers):
+  * train_step:   (params, opt_state, batch) -> (params', opt_state', metrics)
+  * prefill_step: (params, batch, caches) -> (last-token logits, caches')
+  * decode_step:  (params, caches, inputs, pos) -> (logits, caches')
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.transformer import RunCtx
+from repro.optim import adamw
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh=None,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+    remat: bool = True,
+    microbatches: int = 1,
+    pure_dp: bool = False,
+):
+    """Train step; ``microbatches > 1`` scans gradient accumulation over
+    batch slices (activation memory / n_micro — how the 200B+ MoE cells fit
+    a 16 GB v5e at global batch 256)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    ctx = RunCtx(mesh=mesh, pure_dp=pure_dp)
+
+    def loss_fn(p, b):
+        return transformer.loss_fn(cfg, p, b, ctx=ctx, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), g0), micro
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, info = adamw.adamw_update(
+            opt_cfg, grads, params, opt_state
+        )
+        return new_params, new_opt, dict(info, loss=loss)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    ctx = RunCtx(mesh=mesh)
+
+    def prefill_step(params, batch, caches):
+        hidden, caches = transformer.forward(
+            cfg,
+            params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            caches=caches,
+            ctx=ctx,
+        )
+        w = transformer.unembed_matrix(cfg, params)
+        logits = (hidden[:, -1] @ w).astype(jnp.float32)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    ctx = RunCtx(mesh=mesh)
+
+    def decode_step(params, caches, inputs, pos):
+        B = (inputs.get("tokens") if "tokens" in inputs else inputs["embeds"]).shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        hidden, caches = transformer.forward(
+            cfg,
+            params,
+            tokens=inputs.get("tokens"),
+            embeds=inputs.get("embeds"),
+            positions=positions,
+            caches=caches,
+            ctx=ctx,
+        )
+        w = transformer.unembed_matrix(cfg, params)
+        logits = (hidden[:, -1] @ w).astype(jnp.float32)
+        return logits, caches
+
+    return decode_step

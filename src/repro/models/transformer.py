@@ -1,0 +1,354 @@
+"""Unified causal-LM assembly over all layer families.
+
+Layers are grouped into maximal runs of a repeating unit (the config
+``pattern``) and executed with ``jax.lax.scan`` over stacked parameters —
+compile time is O(#distinct units), not O(n_layers), which is what makes the
+512-device dry-run of 60-94 layer models tractable (and is the standard
+production structure, cf. MaxText).
+
+Activation layout (DESIGN.md §5): block-boundary activations are sharded
+(batch over data axes, sequence over ``model``) — Megatron-style sequence
+parallelism; interior matmuls run tensor-parallel over ``model`` (GSPMD
+inserts the all-gather / reduce-scatter pair).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import attention, layers, mla, moe, rglru, xlstm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Distribution context threaded through the forward pass.
+
+    ``pure_dp``: batch sharded over ALL mesh axes (ZeRO-3 data parallelism,
+    no tensor parallelism) — the right layout when params are small and the
+    global batch covers the chip count; TP contractions (e.g. the mLSTM
+    head_dim psums) disappear entirely.
+    """
+
+    mesh: Optional[Mesh] = None
+    seq_shard: bool = True  # shard boundary activations' seq dim over model
+    pure_dp: bool = False
+
+    @property
+    def dp_axes(self) -> tuple:
+        if self.mesh is None:
+            return ()
+        axes = ("pod", "data", "model") if self.pure_dp else ("pod", "data")
+        return tuple(a for a in axes if a in self.mesh.axis_names)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def boundary(self, x: jax.Array) -> jax.Array:
+        """(B, S, d) layer-boundary constraint."""
+        if self.mesh is None:
+            return x
+        seq = (
+            "model"
+            if (self.seq_shard and not self.pure_dp and x.shape[1] > 1)
+            else None
+        )
+        return self.constrain(x, P(self.dp_axes, seq, None))
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+def _ff_kind(cfg: ModelConfig, layer_idx: int, kind: str) -> str:
+    if kind == "mlstm":
+        return "none"
+    if kind == "slstm":
+        return "dense43"
+    if cfg.is_moe and layer_idx >= cfg.first_dense_layers:
+        return "moe"
+    return "dense"
+
+
+def layer_specs(cfg: ModelConfig) -> list:
+    return [
+        (kind, _ff_kind(cfg, i, kind)) for i, kind in enumerate(cfg.layer_kinds)
+    ]
+
+
+def group_layers(cfg: ModelConfig) -> list:
+    """[(unit: tuple[spec], repeats: int)] covering all layers in order."""
+    specs = layer_specs(cfg)
+    p = len(cfg.pattern)
+    groups, i, L = [], 0, len(specs)
+    while i < L:
+        unit = tuple(specs[i : i + p])
+        r = 0
+        while i + (r + 1) * p <= L and tuple(specs[i + r * p : i + (r + 1) * p]) == unit:
+            r += 1
+        if r >= 1 and len(unit) == p:
+            groups.append((unit, r))
+            i += r * p
+        else:
+            groups.append(((specs[i],), 1))
+            i += 1
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _ff_dim(cfg: ModelConfig, ff: str) -> int:
+    return int(4 * cfg.d_model / 3) if ff == "dense43" else cfg.d_ff
+
+
+def init_block(cfg: ModelConfig, spec: Tuple[str, str], rng, dtype) -> dict:
+    kind, ff = spec
+    r = jax.random.split(rng, 4)
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in ("attn", "local"):
+        p["mix"] = (
+            mla.init_mla(r[0], cfg, dtype)
+            if cfg.attn_kind == "mla"
+            else attention.init_attention(r[0], cfg, dtype)
+        )
+    elif kind == "rec":
+        p["mix"] = rglru.init_rglru(r[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = xlstm.init_mlstm(r[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mix"] = xlstm.init_slstm(r[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if ff != "none":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        if ff == "moe":
+            p["ff"] = moe.init_moe(r[1], cfg, dtype)
+        else:
+            p["ff"] = layers.init_mlp(
+                r[1], cfg.d_model, _ff_dim(cfg, ff), dtype, gated=cfg.gated_mlp
+            )
+    return p
+
+
+def apply_block(
+    cfg: ModelConfig,
+    spec: Tuple[str, str],
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[dict],
+    ctx: RunCtx,
+):
+    kind, ff = spec
+    h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        if cfg.attn_kind == "mla":
+            h, new_cache = mla.mla_block(
+                cfg, params["mix"], h, positions, cache=cache, ctx=ctx
+            )
+        else:
+            h, new_cache = attention.attention_block(
+                cfg, params["mix"], h, positions, kind=kind, cache=cache, ctx=ctx
+            )
+    elif kind == "rec":
+        h, new_cache = rglru.rglru_block(cfg, params["mix"], h, cache=cache)
+    elif kind == "mlstm":
+        h, new_cache = xlstm.mlstm_block(cfg, params["mix"], h, cache=cache)
+    elif kind == "slstm":
+        h, new_cache = xlstm.slstm_block(cfg, params["mix"], h, cache=cache)
+    else:
+        raise ValueError(kind)
+    x = ctx.boundary(x + h)
+
+    if ff != "none":
+        h2 = layers.rms_norm(x, params["norm2"], cfg.norm_eps)
+        if ff == "moe":
+            moe_mesh = None if ctx.pure_dp else ctx.mesh
+            h2 = moe.moe_ff(cfg, params["ff"], h2, moe_mesh, ctx.dp_axes)
+        else:
+            h2 = layers.mlp(params["ff"], h2)
+        x = ctx.boundary(x + h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_block_cache(
+    cfg: ModelConfig, spec: Tuple[str, str], batch: int, s_max: int, dtype
+) -> dict:
+    kind, _ = spec
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            return mla.init_mla_cache(cfg, batch, s_max, dtype)
+        return attention.init_cache(cfg, batch, s_max, dtype)
+    if kind == "local":
+        ring = min(s_max, cfg.window) if cfg.window else s_max
+        c = attention.init_cache(cfg, batch, ring, dtype)
+        c["kv_pos"] = jnp.full((batch, ring), -1, jnp.int32)
+        return c
+    if kind == "rec":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params / forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    groups = group_layers(cfg)
+    r_embed, r_head, rng = jax.random.split(rng, 3)
+    params: dict = {"final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.frontend != "audio_stub":
+        params["embed"] = (
+            jax.random.normal(r_embed, (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.init_dense(
+            r_head, cfg.d_model, cfg.vocab_size * cfg.n_codebooks, dtype
+        )
+
+    gs = []
+    for gi, (unit, repeats) in enumerate(groups):
+        def init_unit(key, unit=unit):
+            ks = jax.random.split(key, len(unit))
+            return [init_block(cfg, spec, k, dtype) for spec, k in zip(unit, ks)]
+
+        keys = jax.random.split(jax.random.fold_in(rng, gi), repeats)
+        gs.append(jax.vmap(init_unit)(keys))  # leaves: (repeats, ...)
+    params["groups"] = gs
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype=None) -> list:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    caches = []
+    for unit, repeats in group_layers(cfg):
+        def one(_, unit=unit):
+            return [init_block_cache(cfg, spec, batch, s_max, dtype) for spec in unit]
+
+        caches.append(jax.vmap(one)(jnp.arange(repeats)))
+    return caches
+
+
+def unembed_matrix(cfg: ModelConfig, params: dict) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    *,
+    tokens: Optional[jax.Array] = None,     # (B, S_txt) int32
+    embeds: Optional[jax.Array] = None,     # (B, S_emb, d) stub frontend
+    positions: Optional[jax.Array] = None,  # (B, S) int32
+    caches: Optional[list] = None,
+    ctx: RunCtx = RunCtx(),
+    remat: bool = False,
+):
+    """Returns (hidden (B, S, d), new_caches or None)."""
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.dtype(cfg.dtype)))
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = ctx.boundary(x)
+
+    groups = group_layers(cfg)
+    new_caches = [] if caches is not None else None
+    for gi, (unit, repeats) in enumerate(groups):
+        gp = params["groups"][gi]
+        gc = caches[gi] if caches is not None else None
+
+        def body(x, per_layer, unit=unit):
+            p_unit, c_unit = per_layer
+            if ctx.pure_dp and ctx.mesh is not None:
+                # ZeRO-3 gather-at-use: without this GSPMD contracts against
+                # data-sharded weights, psum-ing activations per layer
+                p_unit = jax.tree.map(
+                    lambda t: ctx.constrain(t, P(*([None] * t.ndim))), p_unit
+                )
+            ncs = []
+            for li, spec in enumerate(unit):
+                c = c_unit[li] if c_unit is not None else None
+
+                # remat per BLOCK (not per unit): the backward holds one
+                # block's recompute residuals at a time — for multi-block
+                # units (griffin triplets, xlstm octets) this divides the
+                # activation peak by the unit length.
+                def block_fn(x, p, c, spec=spec):
+                    return apply_block(cfg, spec, p, x, positions, c, ctx)
+
+                fn = jax.checkpoint(block_fn) if remat else block_fn
+                x, nc = fn(x, p_unit[li], c)
+                ncs.append(nc if nc is not None else 0)
+            return x, (ncs if caches is not None else 0)
+
+        body_fn = body
+        if repeats == 1:
+            p0 = jax.tree.map(lambda a: a[0], gp)
+            c0 = jax.tree.map(lambda a: a[0], gc) if gc is not None else None
+            x, ncs = body_fn(x, (p0, c0))
+            if caches is not None:
+                new_caches.append(jax.tree.map(lambda a: a[None], ncs))
+        else:
+            x, ncs = jax.lax.scan(body_fn, x, (gp, gc))
+            if caches is not None:
+                new_caches.append(ncs)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    ctx: RunCtx = RunCtx(),
+    remat: bool = True,
+) -> jax.Array:
+    hidden, _ = forward(
+        cfg,
+        params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        ctx=ctx,
+        remat=remat,
+    )
+    labels = batch["labels"]
+    w = unembed_matrix(cfg, params)
+    if cfg.n_codebooks > 1:
+        B, S, nc = labels.shape
+        V = cfg.vocab_size
+        wb = w.reshape(cfg.d_model, nc, V)
+        tot = 0.0
+        for c in range(nc):
+            tot = tot + layers.chunked_ce_loss(hidden, wb[:, c], labels[..., c])
+        return tot / nc
+    # frontends prepend embeds: only the trailing label positions are scored
+    if labels.shape[1] != hidden.shape[1]:
+        hidden = hidden[:, -labels.shape[1] :]
+    return layers.chunked_ce_loss(hidden, w, labels)

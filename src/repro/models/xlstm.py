@@ -1,0 +1,266 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM: per-head matrix memory S in R^{dk x dv} with scalar gates,
+    S_t = f_t S_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (S_t^T q_t) / max(|n_t^T q_t|, 1)
+computed in chunkwise-parallel form (intra-chunk quadratic + inter-chunk
+recurrence) — linear in sequence length, so this arch runs ``long_500k``.
+Simplification vs the paper (DESIGN.md §2): sigmoid input gate and f32
+accumulation instead of the exp-gate + m_t max-stabilizer; recurrence
+structure unchanged.
+
+sLSTM: scalar memory with exponential gating AND the m_t stabilizer,
+block-diagonal recurrent weights per head — inherently sequential
+(lax.scan over time), as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    di = 2 * cfg.d_model               # projection factor 2
+    return di, di // cfg.n_heads
+
+
+def init_mlstm(rng, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    r = jax.random.split(rng, 8)
+    return {
+        "w_up": layers.init_dense(r[0], d, di, dtype),
+        "w_gate": layers.init_dense(r[1], d, di, dtype),
+        "wq": (jax.random.normal(r[2], (H, dh, dh)) * dh**-0.5).astype(dtype),
+        "wk": (jax.random.normal(r[3], (H, dh, dh)) * dh**-0.5).astype(dtype),
+        "wv": (jax.random.normal(r[4], (H, dh, dh)) * dh**-0.5).astype(dtype),
+        "w_f": layers.init_dense(r[5], di, H, dtype),
+        "w_i": layers.init_dense(r[6], di, H, dtype),
+        "out_norm": jnp.zeros((dh,), dtype),
+        "w_down": layers.init_dense(r[7], di, d, dtype),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, log_f, i_gate, chunk: int = 512, state=None):
+    """q,k,v: (B,S,H,dh) f32; log_f (<=0), i_gate: (B,S,H) f32.
+
+    Returns (out (B,S,H,dh), (S_state, n_state)) — the final state feeds the
+    decode cache when prefilling.
+    """
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+
+    def split(x):
+        return x.reshape((B, n, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lfs, igs = map(split, (q, k, v, log_f, i_gate))
+
+    def body(carry, inp):
+        S_st, n_st = carry                       # (B,H,dh,dh), (B,H,dh)
+        qc, kc, vc, lf, ig = inp                 # (B,c,H,dh) / (B,c,H)
+        clf = jnp.cumsum(lf, axis=1)             # decay chunk-start..t incl.
+        dec_q = jnp.exp(clf)[..., None]          # (B,c,H,1)
+        tot = jnp.exp(clf[:, -1])                # (B,H) full-chunk decay
+
+        qf = qc.astype(jnp.float32)
+        # inter-chunk (carried state)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", qf * dec_q, S_st)
+        d_inter = jnp.einsum("bthk,bhk->bth", qf * dec_q, n_st)
+
+        # intra-chunk: att[t,s] = (q_t.k_s) exp(clf_t - clf_s) i_s, s <= t
+        w_ts = jnp.exp(clf[:, :, None, :] - clf[:, None, :, :])  # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w_ts = jnp.where(causal[None, :, :, None], w_ts, 0.0) * ig[:, None]
+        att = jax.lax.dot_general(
+            qc, kc, (((3,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32,
+        ).transpose(0, 2, 3, 1) * w_ts                            # (B,t,s,H)
+        o_intra = jnp.einsum(
+            "btsh,bshv->bthv", att.astype(kc.dtype), vc
+        ).astype(jnp.float32)
+        d_intra = jnp.sum(att, axis=2)                            # (B,t,H)
+
+        # state to end of chunk
+        kw = kc.astype(jnp.float32) * (jnp.exp(clf[:, -1:, :] - clf) * ig)[..., None]
+        S_new = S_st * tot[:, :, None, None] + jnp.einsum(
+            "bshk,bshv->bhkv", kw.astype(kc.dtype), vc
+        ).astype(jnp.float32)
+        n_new = n_st * tot[:, :, None] + jnp.sum(kw, axis=1)
+
+        num = o_inter + o_intra
+        den = jnp.maximum(jnp.abs(d_inter + d_intra), 1.0)[..., None]
+        return (S_new, n_new), num / den
+
+    if state is None:
+        state = (
+            jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+        )
+    state, outs = jax.lax.scan(body, state, (qs, ks, vs, lfs, igs))
+    return outs.swapaxes(0, 1).reshape(B, S, H, dh), state
+
+
+def mlstm_block(
+    cfg: ModelConfig, params: dict, x: jax.Array, *, cache: Optional[dict] = None
+):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di, dh = _mlstm_dims(cfg)
+    u = x @ params["w_up"]                                     # (B,S,di)
+    g = x @ params["w_gate"]
+    uh = u.reshape(B, S, H, dh)
+    # q/k/v stay bf16 (the core accumulates in f32 via preferred_element_type)
+    # — storing them f32 was a 3.2 GB/layer residual term in the train cell
+    q = jnp.einsum("bshk,hkj->bshj", uh, params["wq"])
+    k = jnp.einsum("bshk,hkj->bshj", uh, params["wk"]) * dh**-0.5
+    v = jnp.einsum("bshk,hkj->bshj", uh, params["wv"])
+    log_f = jax.nn.log_sigmoid((u @ params["w_f"]).astype(jnp.float32))   # (B,S,H)
+    i_g = jax.nn.sigmoid((u @ params["w_i"]).astype(jnp.float32))
+
+    if cache is None or S > 1:
+        state = (cache["S"], cache["n"]) if cache is not None else None
+        h, (S_f, n_f) = _mlstm_core_chunked(q, k, v, log_f, i_g, state=state)
+        new_cache = None
+        if cache is not None:  # prefill-through-cache
+            new_cache = {"S": S_f, "n": n_f, "pos": cache["pos"] + S}
+    else:
+        f = jnp.exp(log_f[:, 0])[..., None]                    # (B,H,1)
+        S_new = cache["S"] * f[..., None] + jnp.einsum(
+            "bhk,bhv->bhkv", (i_g[:, 0, :, None] * k[:, 0]), v[:, 0]
+        )
+        n_new = cache["n"] * f + i_g[:, 0, :, None] * k[:, 0]
+        num = jnp.einsum("bhk,bhkv->bhv", q[:, 0], S_new)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, 0], n_new)), 1.0
+        )[..., None]
+        h = (num / den)[:, None]                               # (B,1,H,dh)
+        new_cache = {"S": S_new, "n": n_new, "pos": cache["pos"] + 1}
+
+    h = layers.rms_norm(h.astype(x.dtype), params["out_norm"], cfg.norm_eps)
+    h = h.reshape(B, S, di) * jax.nn.silu(g)
+    return h @ params["w_down"], new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    di, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "S": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    r = jax.random.split(rng, 9)
+    p = {}
+    for j, name in enumerate(("z", "i", "f", "o")):
+        p[f"w_{name}"] = layers.init_dense(r[2 * j], d, d, dtype)
+        p[f"r_{name}"] = (
+            jax.random.normal(r[2 * j + 1], (H, dh, dh)) * dh**-0.5
+        ).astype(dtype)
+    p["w_out"] = layers.init_dense(r[8], d, d, dtype)
+    return p
+
+
+def _slstm_scan(
+    cfg: ModelConfig, params: dict, x: jax.Array, state: dict, chunk: int = 64
+):
+    """x: (B,S,d); state: c,n,h,m (B,H,dh).
+
+    Nested O(sqrt-T)-remat scan: the outer scan over sequence chunks is
+    checkpointed, so the backward holds only chunk-boundary states plus one
+    chunk's step residuals — per-step gate tensors never accumulate over the
+    full sequence (this was a 20 GB/device temp term in the train dry-run).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, d).swapaxes(0, 1)            # (n,B,c,d)
+
+    def chunk_body(st, xc):
+        gx = {
+            name: (xc @ params[f"w_{name}"]).astype(jnp.float32)
+            .reshape(B, chunk, H, dh)
+            for name in ("z", "i", "f", "o")
+        }
+
+        def step(st, t):
+            h = st["h"]
+
+            def gate(name):
+                rec = jnp.einsum(
+                    "bhk,hkj->bhj", h.astype(x.dtype), params[f"r_{name}"]
+                ).astype(jnp.float32)
+                return gx[name][:, t] + rec
+
+            z = jnp.tanh(gate("z"))
+            o = jax.nn.sigmoid(gate("o"))
+            i_t = gate("i")                  # log-space exponential gates
+            f_t = gate("f")
+            m_new = jnp.maximum(f_t + st["m"], i_t)
+            i_p = jnp.exp(i_t - m_new)
+            f_p = jnp.exp(f_t + st["m"] - m_new)
+            c = f_p * st["c"] + i_p * z
+            nrm = f_p * st["n"] + i_p
+            h_new = o * (c / jnp.maximum(nrm, 1e-6))
+            return {"c": c, "n": nrm, "h": h_new, "m": m_new}, h_new
+
+        st, hs = jax.lax.scan(step, st, jnp.arange(chunk))   # hs (c,B,H,dh)
+        return st, hs
+
+    state, hs = jax.lax.scan(jax.checkpoint(chunk_body), state, xs)  # (n,c,B,H,dh)
+    out = hs.transpose(2, 0, 1, 3, 4).reshape(B, S, d)
+    return out.astype(x.dtype), state
+
+
+def slstm_block(
+    cfg: ModelConfig, params: dict, x: jax.Array, *, cache: Optional[dict] = None
+):
+    B = x.shape[0]
+    state = (
+        {k: cache[k] for k in ("c", "n", "h", "m")}
+        if cache is not None
+        else init_slstm_state(cfg, B)
+    )
+    h, state = _slstm_scan(cfg, params, x, state)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(state, pos=cache["pos"] + x.shape[1])
+    return h @ params["w_out"], new_cache
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 30.0}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    return dict(init_slstm_state(cfg, batch), pos=jnp.zeros((), jnp.int32))

@@ -1,0 +1,2 @@
+from repro.runtime.preemption import PreemptionHandler  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401

@@ -1,0 +1,43 @@
+"""FINN-style BNN baseline: trains, and packed XNOR inference matches the
+float-binarized network."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import bnn
+from repro.data import make_boolean_classification
+
+
+def test_bnn_learns_and_pack_matches():
+    # one generated distribution, split train/test (same class prototypes)
+    Xall, yall = make_boolean_classification(1900, 64, 4, seed=0)
+    X, y = Xall[:1500], yall[:1500]
+    Xte, yte = Xall[1500:], yall[1500:]
+    cfg = bnn.BNNConfig(layer_sizes=(64, 128, 4), lr=5e-3)
+    params = bnn.bnn_init(cfg, jax.random.PRNGKey(0))
+    params = bnn.bnn_train(cfg, params, X, y, epochs=8, batch_size=50,
+                           rng=jax.random.PRNGKey(1))
+
+    # float-binarized argmax
+    logits = bnn._forward_float(params, jnp.asarray(Xte))
+    pred_float = np.asarray(jnp.argmax(logits, -1))
+    acc = (pred_float == yte).mean()
+    assert acc > 0.6, acc
+
+    # packed XNOR-popcount path agrees exactly
+    packed = bnn.bnn_pack(params)
+    pred_packed = np.asarray(bnn.bnn_predict(packed, jnp.asarray(Xte)))
+    agree = (pred_packed == pred_float).mean()
+    assert agree > 0.99, agree
+
+
+def test_bnn_packed_kernel_path():
+    X, _ = make_boolean_classification(64, 32, 2, seed=0)
+    cfg = bnn.BNNConfig(layer_sizes=(32, 64, 2))
+    params = bnn.bnn_init(cfg, jax.random.PRNGKey(0))
+    packed = bnn.bnn_pack(params)
+    a = np.asarray(bnn.bnn_predict(packed, jnp.asarray(X)))
+    b = np.asarray(bnn.bnn_predict(packed, jnp.asarray(X),
+                                   use_kernel=True, interpret=True))
+    np.testing.assert_array_equal(a, b)

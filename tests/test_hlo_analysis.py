@@ -1,0 +1,76 @@
+"""The roofline's HLO analyzer: validated against known-FLOP programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scanned_matmul_trip_counts():
+    """XLA's cost_analysis counts while bodies once; ours resolves trips."""
+    def step(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), 0
+        x, _ = jax.lax.scan(body, x, w)
+        return x
+
+    w = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    txt = _compile(step, w, x)
+    cost = H.analyze(txt)
+    expected = 10 * 2 * 32 * 128 * 128
+    assert 0.95 < cost.flops / expected < 1.10, cost.flops / expected
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    txt = _compile(lambda a, b: a @ b, a, b)
+    cost = H.analyze(txt)
+    expected = 2 * 64 * 256 * 32
+    assert 0.95 < cost.flops / expected < 1.05
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    txt = _compile(lambda x: x * 2 + 1, x)
+    cost = H.analyze(txt)
+    # read + write = 8 MB; fusions should keep us within 2x of that
+    assert 8e6 <= cost.bytes <= 2.5e7, cost.bytes
+
+
+def test_shape_parsing():
+    s = H.parse_shape("bf16[128,4096]{1,0}")
+    assert s.dtype == "bf16" and s.dims == (128, 4096)
+    assert s.n_bytes == 128 * 4096 * 2
+    t = H.parse_shape("(s32[], f32[8,8]{1,0})")
+    assert t.tuple_elems is not None and t.n_bytes == 4 + 256 + 0
+
+
+def test_collective_wire_model():
+    op = H.Op("ag", H.parse_shape("f32[64,256]"), "all-gather", ["x"],
+              "replica_groups=[2,4]<=[8], dimensions={1}")
+    comp = H.Computation("c", {}, [])
+    wire = H._collective_wire_bytes(op, comp)
+    assert wire == 64 * 256 * 4 * 3 / 4  # (g-1)/g of the gathered result
+
+    ar = H.Op("ar", H.parse_shape("f32[1024]"), "all-reduce", ["x"],
+              "replica_groups=[1,8]<=[8]")
+    assert H._collective_wire_bytes(ar, comp) == 2 * 4096 * 7 / 8
+
+
+def test_contributions_sorted():
+    def step(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), 0
+        return jax.lax.scan(body, x, w)[0]
+
+    w = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    rows, full = H.contributions(_compile(step, w, x), top=5)
+    assert rows and rows[0]["bytes"] >= rows[-1]["bytes"]

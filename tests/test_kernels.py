@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packetizer, tm
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+KW = dict(use_kernel=True, interpret=True)
+
+
+def _sparse_includes(C, W, density=0.05):
+    m = RNG.random((C, W * 32)) < density
+    return packetizer.pack_bits_np(m.astype(np.uint8))
+
+
+@pytest.mark.parametrize("B,C,W", [(1, 1, 1), (7, 13, 3), (64, 128, 8), (33, 257, 5)])
+def test_clause_fire_sweep(B, C, W):
+    lit = jnp.asarray(RNG.integers(0, 2**32, (B, W), dtype=np.uint32))
+    inc = jnp.asarray(_sparse_includes(C, W))
+    r = ref.clause_fire_ref(lit, inc)
+    k = ops.clause_fire(lit, inc, **KW)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+    assert int(np.asarray(k).sum()) > 0  # sparse includes -> some clauses fire
+
+
+@pytest.mark.parametrize("blocks", [dict(), dict(block_b=8, block_c=128, block_w=2)])
+def test_clause_fire_blockings(blocks):
+    lit = jnp.asarray(RNG.integers(0, 2**32, (17, 5), dtype=np.uint32))
+    inc = jnp.asarray(_sparse_includes(39, 5))
+    r = ref.clause_fire_ref(lit, inc)
+    k = ops.clause_fire(lit, inc, **KW, **blocks)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+
+@pytest.mark.parametrize("B,C,K", [(3, 7, 2), (65, 300, 10), (128, 512, 32)])
+def test_class_sum_sweep(B, C, K):
+    fired = jnp.asarray(RNG.integers(0, 2, (B, C), dtype=np.int8))
+    votes = jnp.asarray(RNG.integers(-9, 10, (C, K), dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.class_sum_ref(fired, votes)),
+        np.asarray(ops.class_sums(fired, votes, **KW)),
+    )
+
+
+@pytest.mark.parametrize("C,L,B", [(5, 9, 2), (64, 200, 7), (130, 513, 4)])
+@pytest.mark.parametrize("p_act,p_inact", [(1.0, 0.1), (0.9, 0.25)])
+def test_ta_delta_sweep(C, L, B, p_act, p_inact):
+    ta = jnp.asarray(RNG.integers(-128, 128, (C, L), dtype=np.int8))
+    lits = jnp.asarray(RNG.integers(0, 2, (B, L), dtype=np.uint8))
+    fire = jnp.asarray(RNG.integers(0, 2, (B, C), dtype=np.uint8))
+    ftype = jnp.asarray(RNG.integers(0, 3, (B, C), dtype=np.uint8))
+    seed = jnp.uint32(1234)
+    r = ref.ta_delta_ref(ta, lits, fire, ftype, seed, p_act=p_act, p_inact=p_inact)
+    k = ops.ta_delta(ta, lits, fire, ftype, seed, p_act=p_act, p_inact=p_inact, **KW)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+
+@pytest.mark.parametrize("B,O,W,pad", [(4, 6, 2, 0), (33, 65, 4, 13), (128, 256, 8, 31)])
+def test_xnor_popcount_sweep(B, O, W, pad):
+    n_bits = W * 32 - pad
+    # real packers zero the padding bits; emulate that
+    a_bits = RNG.integers(0, 2, (B, n_bits), dtype=np.uint8)
+    w_bits = RNG.integers(0, 2, (O, n_bits), dtype=np.uint8)
+    a = jnp.asarray(packetizer.pack_bits_np(a_bits))
+    w = jnp.asarray(packetizer.pack_bits_np(w_bits))
+    r = ref.xnor_popcount_ref(a, w, n_bits)
+    k = ops.xnor_dot(a, w, n_bits, **KW)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+    # oracle-of-oracle: ±1 dot product
+    pm_a = 2.0 * a_bits - 1
+    pm_w = 2.0 * w_bits - 1
+    np.testing.assert_array_equal(np.asarray(r), (pm_a @ pm_w.T).astype(np.int32))
+
+
+def test_hash_rng_uniformity():
+    """The kernel RNG should be close to uniform (coarse sanity)."""
+    idx = jnp.arange(100_000, dtype=jnp.uint32)
+    r = np.asarray(ref.hash_u32(idx, jnp.uint32(7)))
+    frac = (r < ref.prob_to_u32(0.3)).mean()
+    assert abs(frac - 0.3) < 0.01
+
+
+def test_tm_forward_packed_matches_dense():
+    cfg = tm.TMConfig(n_features=50, n_classes=3, clauses_per_class=12)
+    state = tm.init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.integers(0, 2, (20, 50), dtype=np.uint8))
+    lits = tm.literals(x)
+    dense = tm.class_sums(cfg, state.ta_state, lits, training=False)
+    lw = packetizer.pack_bits(lits)
+    iw = packetizer.pack_include_masks(state.ta_state)
+    nonempty = jnp.any(state.ta_state >= 0, axis=-1).astype(jnp.uint8)
+    packed = ops.tm_forward_packed(lw, iw, tm.vote_matrix(cfg), nonempty, **KW)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(packed))
+
+
+@pytest.mark.parametrize("B,S,H,hd,bq,bkv", [(2, 64, 3, 16, 16, 16), (1, 128, 2, 32, 32, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kernel(B, S, H, hd, bq, bkv, causal):
+    from repro.kernels.flash_attention import flash_forward
+
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    out = flash_forward(q, k, v, causal=causal, block_q=bq, block_kv=bkv,
+                        interpret=True)
+    expect = ref.flash_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)

@@ -1,0 +1,208 @@
+"""LM substrate numerics: flash attention, recurrent cores, losses."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, layers, rglru, xlstm
+from repro.models.config import ModelConfig
+
+RNG = np.random.default_rng(0)
+
+
+def _ref_attn(q, k, v, window=0):
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    k = jnp.repeat(k, H // K, axis=2)
+    v = jnp.repeat(v, H // K, axis=2)
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k) / np.sqrt(hd)
+    i = jnp.arange(S)
+    mask = i[None, :] <= i[:, None]
+    if window:
+        mask &= i[None, :] > i[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    return jnp.einsum("bhqt,bthd->bqhd", jax.nn.softmax(s, -1), v)
+
+
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("K", [2, 4])
+def test_flash_forward_and_grads(window, K):
+    B, S, H, hd = 2, 64, 4, 16
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, K, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = attention.flash_attention(q, k, v, pos, pos, window=window,
+                                    q_chunk=16, kv_chunk=16)
+    ref = _ref_attn(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    f1 = lambda *a: (attention.flash_attention(*a, pos, pos, window=window,
+                                               q_chunk=16, kv_chunk=16) ** 2).sum()
+    f2 = lambda *a: (_ref_attn(*a, window) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_decode_matches_forward_gqa():
+    """Token-by-token decode through the KV cache == full forward."""
+    cfg = ModelConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, dtype="float32")
+    params = attention.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jnp.asarray(RNG.normal(size=(B, S, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = attention.attention_block(cfg, params, x, pos, kind="attn")
+
+    cache = attention.init_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = attention.attention_block(
+            cfg, params, x[:, t : t + 1], pos[:, t : t + 1], kind="attn",
+            cache=cache,
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=1e-4)
+
+
+def test_ring_cache_local_attention_decode():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, window=6, dtype="float32")
+    params = attention.init_attention(jax.random.PRNGKey(1), cfg, jnp.float32)
+    B, S = 1, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = attention.attention_block(cfg, params, x, pos, kind="local")
+
+    ring = min(S, cfg.window)
+    cache = attention.init_cache(cfg, B, ring, jnp.float32)
+    cache["kv_pos"] = jnp.full((B, ring), -1, jnp.int32)
+    outs = []
+    for t in range(S):
+        o, cache = attention.attention_block(
+            cfg, params, x[:, t : t + 1], pos[:, t : t + 1], kind="local",
+            cache=cache,
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=1e-4)
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=1,
+                      d_ff=32, vocab_size=8, rnn_width=16, dtype="float32")
+    params = rglru.init_rglru(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 10
+    x = jnp.asarray(RNG.normal(size=(B, S, 16)), jnp.float32)
+    full, _ = rglru.rglru_block(cfg, params, x)
+
+    cache = rglru.init_rglru_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = rglru.rglru_block(cfg, params, x[:, t : t + 1], cache=cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=1e-4)
+
+
+def test_mlstm_chunked_matches_stepwise():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=0, vocab_size=8, dtype="float32")
+    params = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, 16)) * 0.3, jnp.float32)
+    full, _ = xlstm.mlstm_block(cfg, params, x)
+
+    cache = xlstm.init_mlstm_cache(cfg, B)
+    outs = []
+    for t in range(S):
+        o, cache = xlstm.mlstm_block(cfg, params, x[:, t : t + 1], cache=cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=2e-4)
+
+
+def test_slstm_chunking_invariance():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=0, vocab_size=8, dtype="float32")
+    params = xlstm.init_slstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, 16)), jnp.float32)
+    st = xlstm.init_slstm_state(cfg, B)
+    out1, _ = xlstm._slstm_scan(cfg, params, x, st, chunk=4)
+    st = xlstm.init_slstm_state(cfg, B)
+    out2, _ = xlstm._slstm_scan(cfg, params, x, st, chunk=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+def test_chunked_ce_matches_direct():
+    B, S, d, V = 2, 16, 8, 32
+    x = jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(d, V)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32)
+    labels = labels.at[0, :3].set(-1)  # masked positions
+    chunked = layers.chunked_ce_loss(x, w, labels, n_chunks=4)
+    logits = (x @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    tgt = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    direct = ((lse - tgt) * mask).sum() / mask.sum()
+    np.testing.assert_allclose(float(chunked), float(direct), rtol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention scores depend only on relative position."""
+    hd = 16
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, hd)), jnp.float32)
+    def score(off):
+        qp = jnp.asarray([[5 + off]], jnp.int32)
+        kp = jnp.asarray([[2 + off]], jnp.int32)
+        qr = layers.apply_rope(q, qp, 10000.0)
+        kr = layers.apply_rope(k, kp, 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(0) - score(37)) < 1e-4
+
+
+def test_rglru_prefill_then_decode_matches_full():
+    """Prefill-through-cache + decode == full-sequence forward (the path the
+    prefill_32k dry-run cells exercise for recurrent archs)."""
+    cfg = ModelConfig(name="t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=1,
+                      d_ff=32, vocab_size=8, rnn_width=16, dtype="float32")
+    params = rglru.init_rglru(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jnp.asarray(RNG.normal(size=(B, S, 16)), jnp.float32)
+    full, _ = rglru.rglru_block(cfg, params, x)
+
+    cache = rglru.init_rglru_cache(cfg, B, jnp.float32)
+    pre, cache = rglru.rglru_block(cfg, params, x[:, :8], cache=cache)
+    np.testing.assert_allclose(np.asarray(full[:, :8]), np.asarray(pre), atol=1e-4)
+    outs = [pre]
+    for t in range(8, S):
+        o, cache = rglru.rglru_block(cfg, params, x[:, t : t + 1], cache=cache)
+        outs.append(o)
+    joined = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(joined), atol=1e-4)
+
+
+def test_mlstm_prefill_then_decode_matches_full():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=0, vocab_size=8, dtype="float32")
+    params = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, 16)) * 0.3, jnp.float32)
+    full, _ = xlstm.mlstm_block(cfg, params, x)
+
+    cache = xlstm.init_mlstm_cache(cfg, B)
+    pre, cache = xlstm.mlstm_block(cfg, params, x[:, :12], cache=cache)
+    np.testing.assert_allclose(np.asarray(full[:, :12]), np.asarray(pre), atol=2e-4)
+    outs = [pre]
+    for t in range(12, S):
+        o, cache = xlstm.mlstm_block(cfg, params, x[:, t : t + 1], cache=cache)
+        outs.append(o)
+    joined = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(joined), atol=2e-4)

@@ -1,0 +1,63 @@
+"""Property tests for the bandwidth-driven packetizer (paper Fig. 4)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packetizer, tm
+
+
+bits_arrays = st.integers(1, 4).flatmap(
+    lambda b: st.integers(1, 200).flatmap(
+        lambda l: st.lists(
+            st.lists(st.integers(0, 1), min_size=l, max_size=l),
+            min_size=b, max_size=b,
+        )
+    )
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits_arrays)
+def test_pack_unpack_roundtrip(bits):
+    arr = np.array(bits, dtype=np.uint8)
+    words = packetizer.pack_bits(jnp.asarray(arr))
+    back = packetizer.unpack_bits(words, arr.shape[-1])
+    np.testing.assert_array_equal(np.asarray(back), arr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits_arrays)
+def test_np_and_jnp_twins_agree(bits):
+    arr = np.array(bits, dtype=np.uint8)
+    w_np = packetizer.pack_bits_np(arr)
+    w_j = np.asarray(packetizer.pack_bits(jnp.asarray(arr)))
+    np.testing.assert_array_equal(w_np, w_j)
+    np.testing.assert_array_equal(
+        packetizer.unpack_bits_np(w_np, arr.shape[-1]), arr
+    )
+
+
+def test_lsb_first_layout():
+    # bit i of word w is literal 32*w + i (paper Fig. 4a LSB-first order)
+    bits = np.zeros((1, 40), np.uint8)
+    bits[0, 0] = 1   # word 0, bit 0
+    bits[0, 33] = 1  # word 1, bit 1
+    w = np.asarray(packetizer.pack_bits(jnp.asarray(bits)))
+    assert w[0, 0] == 1
+    assert w[0, 1] == 2
+
+
+def test_padding_never_violates():
+    """Zero-padding an include mask can never produce a clause violation."""
+    ta = np.full((3, 40), -1, np.int8)
+    ta[0, :3] = 1
+    inc_words = packetizer.pack_include_masks(jnp.asarray(ta))
+    # padding bits (40..63) of word 1 must be zero
+    assert int(np.asarray(inc_words)[0, 1]) < 2 ** (40 - 32)
+
+
+def test_pack_literals_shape():
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 2, (5, 20), dtype=np.uint8))
+    w = packetizer.pack_literals(x)
+    assert w.shape == (5, packetizer.n_words(40))

@@ -1,0 +1,88 @@
+"""End-to-end behaviour of the paper's system: the full MATADOR flow
+train -> compile -> verify -> deploy artifact, on paper-shaped datasets."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, packetizer, tm, train
+from repro.data import paper_dataset
+
+
+@pytest.fixture(scope="module")
+def trained_mnist_like():
+    """A small TM trained on MNIST-dimensioned synthetic data (784 feats,
+    10 classes) — module-scoped: several tests share it."""
+    X, y, Xte, yte = paper_dataset("mnist", n_train=3000, n_test=600)
+    cfg = tm.TMConfig(n_features=784, n_classes=10, clauses_per_class=40,
+                      threshold=40, s=8.0)
+    state = tm.init(cfg, jax.random.PRNGKey(0))
+    state = train.fit(cfg, state, jnp.asarray(X), jnp.asarray(y),
+                      epochs=8, batch_size=50, rng=jax.random.PRNGKey(1))
+    return cfg, state, Xte, yte
+
+
+def test_accuracy_on_paper_shaped_data(trained_mnist_like):
+    cfg, state, Xte, yte = trained_mnist_like
+    acc = float(tm.accuracy(cfg, state, jnp.asarray(Xte), jnp.asarray(yte)))
+    assert acc > 0.85, acc  # synthetic prototypes; the claim is learnability
+
+
+def test_model_exhibits_paper_sparsity(trained_mnist_like):
+    """Paper §II: 'extremely high sparsity in the occurrence of includes'."""
+    cfg, state, _, _ = trained_mnist_like
+    include_frac = float((np.asarray(state.ta_state) >= 0).mean())
+    assert include_frac < 0.2, include_frac
+
+
+def test_boolean_to_silicon_flow(trained_mnist_like):
+    """The full automation pipeline with design verification (paper Fig. 6):
+    compile -> auto-verify against the dense model -> save -> reload -> run."""
+    cfg, state, Xte, yte = trained_mnist_like
+    compiled = compiler.compile_tm(cfg, state.ta_state)
+
+    # logic sharing + dead-word elimination actually engaged
+    assert compiled.stats.clause_sharing >= 0.0
+    assert compiled.stats.n_words_active <= compiled.stats.n_words_dense
+
+    # auto-verification: compiled artifact == dense model on the test set
+    xp = packetizer.pack_literals(jnp.asarray(Xte))
+    pred_c = np.asarray(jnp.argmax(compiler.run_compiled(compiled, xp), -1))
+    pred_d = np.asarray(tm.predict(cfg, state, jnp.asarray(Xte)))
+    np.testing.assert_array_equal(pred_c, pred_d)
+
+    # deploy artifact round-trips
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "accelerator.npz")
+        compiled.save(path)
+        reloaded = compiler.CompiledTM.load(path)
+        pred_r = np.asarray(jnp.argmax(compiler.run_compiled(reloaded, xp), -1))
+        np.testing.assert_array_equal(pred_c, pred_r)
+
+
+def test_compiled_beats_random(trained_mnist_like):
+    cfg, state, Xte, yte = trained_mnist_like
+    compiled = compiler.compile_tm(cfg, state.ta_state)
+    pred = np.asarray(compiler.predict_compiled(compiled, jnp.asarray(Xte)))
+    assert (pred == yte).mean() > 0.85
+
+
+def test_all_paper_datasets_train_one_step():
+    """Every Table-II dataset shape runs through the training step."""
+    from repro.configs.matador_tm import TM_CONFIGS
+
+    for name in ("tm-mnist", "tm-kws6", "tm-cifar2"):
+        cfg = TM_CONFIGS[name]
+        X, y, _, _ = paper_dataset(name.replace("tm-", ""), n_train=64, n_test=8)
+        small = tm.TMConfig(
+            n_features=cfg.n_features, n_classes=cfg.n_classes,
+            clauses_per_class=4, threshold=10, s=5.0,
+        )
+        st = tm.init(small, jax.random.PRNGKey(0))
+        st2, metrics = train.train_step(small, st, jnp.asarray(X), jnp.asarray(y),
+                                        jax.random.PRNGKey(1))
+        assert int(metrics["delta_abs_sum"]) > 0
