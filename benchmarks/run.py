@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   * fig8_*     — paper Fig. 8 analog (logic-sharing resource savings)
   * fig7_*     — paper Fig. 7 analog (HCB chain schedule sweep)
   * tmcore_*   — TM datapath micro-benchmarks (train/infer steps)
+  * fusedinfer_* — fused single-pass inference kernel vs the unfused
+    two-kernel pipeline vs the jnp oracle (also written, with metadata,
+    to BENCH_fused_infer.json — the cross-PR perf trajectory file)
   * roofline_* — per dry-run cell roofline terms (deliverable g)
 """
 
@@ -62,11 +65,15 @@ def main() -> None:
                     help="skip the slow train-from-scratch tables")
     args = ap.parse_args()
 
-    from benchmarks import hcb_pipeline, logic_sharing, roofline_report, table1_inference
+    from benchmarks import (fused_infer, hcb_pipeline, logic_sharing,
+                            roofline_report, table1_inference)
 
     rows = []
     rows += _tm_core_micro()
     rows += hcb_pipeline.run()
+    fused_rows = fused_infer.run(fast=args.fast)
+    fused_infer.write_report(fused_rows)
+    rows += fused_rows
     if not args.fast:
         rows += table1_inference.run("mnist")
         rows += logic_sharing.run("mnist")

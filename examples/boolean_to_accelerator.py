@@ -44,12 +44,12 @@ def main() -> None:
     assert (pred_dense == pred_comp).all(), "verification FAILED"
     print("verification: compiled artifact == dense model on 1000 samples OK")
 
-    # 3b. the same datapath through the Pallas kernel (interpret on CPU)
+    # 3b. the same datapath through the fused Pallas kernel (interpret on CPU)
     pred_kernel = np.asarray(
         compiler.predict_compiled(compiled, jnp.asarray(Xte[:64]),
                                   use_kernel=True, interpret=True))
     assert (pred_kernel == pred_dense[:64]).all()
-    print("verification: Pallas clause_eval kernel path OK")
+    print("verification: fused Pallas inference kernel path OK")
 
     # 4. deployment artifact
     with tempfile.TemporaryDirectory() as d:

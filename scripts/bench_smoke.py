@@ -1,0 +1,49 @@
+"""Fast fused-vs-unfused inference microbenchmark -> BENCH_fused_infer.json.
+
+    PYTHONPATH=src python scripts/bench_smoke.py [--full] [--reps N] [--no-autotune]
+
+A CI-sized smoke of the fused single-pass TM inference kernel
+(src/repro/kernels/fused_infer.py) against the legacy two-kernel pipeline
+and the jnp oracle on identical shapes.  Appends nothing: each run rewrites
+``BENCH_fused_infer.json`` with fresh numbers + backend metadata, so the
+perf trajectory of the fused kernel is a per-PR diffable artifact.
+
+The fused row runs at the block tiling chosen by the autotuner's cached
+sweep (kernels/autotune.py); ``--no-autotune`` pins the kernel defaults.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# runnable as `python scripts/bench_smoke.py` — put the repo root (the
+# `benchmarks` package) on the path alongside PYTHONPATH=src
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="run every benchmark shape, not just the smoke one")
+    ap.add_argument("--reps", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_fused_infer.json")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="use default fused block sizes instead of the "
+                         "cached autotuner sweep")
+    args = ap.parse_args()
+
+    from benchmarks import fused_infer
+
+    rows = fused_infer.run(fast=not args.full, reps=args.reps,
+                           autotune=not args.no_autotune)
+    fused_infer.write_report(rows, args.out)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

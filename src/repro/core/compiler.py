@@ -223,21 +223,32 @@ def run_compiled(
     compiled: CompiledTM,
     x_packed: jnp.ndarray,
     *,
-    use_kernel: bool = False,
-    interpret: bool = True,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    fuse: bool = True,
+    **blocks,
 ) -> jnp.ndarray:
     """Inference with the compiled artifact: (B, W_dense) packed literals ->
     (B, n_classes) int32 class sums.
 
-    ``use_kernel`` dispatches the Pallas clause-eval kernel (interpret mode on
-    CPU); otherwise the pure-jnp bitpacked path (kernels/ref.py oracle).
+    Dispatch defers to ``kernels/ops`` resolution: ``use_kernel=None``
+    follows ``REPRO_USE_PALLAS``; ``interpret=None`` compiles on TPU and
+    interprets elsewhere (no more unconditional ``interpret=True``).  The
+    kernel path runs the fused single-pass kernel (``fuse=False`` for the
+    legacy two-kernel pipeline); otherwise the pure-jnp oracle.  Empty-clause
+    masking is unnecessary here — compilation already dropped empty clauses
+    (the degenerate all-empty artifact keeps one all-zero clause whose votes
+    are zero).
     """
     from repro.kernels import ops
 
     xw = x_packed[:, jnp.asarray(compiled.word_ids)]        # dead-word elim
     inc = jnp.asarray(compiled.include_words)
-    fired = ops.clause_fire(xw, inc, use_kernel=use_kernel, interpret=interpret)
-    return fired.astype(jnp.int32) @ jnp.asarray(compiled.votes)
+    votes = jnp.asarray(compiled.votes)
+    return ops.tm_forward_packed(
+        xw, inc, votes, None,
+        use_kernel=use_kernel, interpret=interpret, fuse=fuse, **blocks,
+    )
 
 
 def predict_compiled(compiled: CompiledTM, x: jnp.ndarray, **kw) -> jnp.ndarray:

@@ -97,7 +97,9 @@ def sharded_train_step_fn(config: tm.TMConfig, mesh: Mesh,
             # delta all-reduce here; the hand schedule is AG(int8) + two tiny
             # psums + psum_scatter (see EXPERIMENTS.md §Perf, TM cell)
             data_ax = d[-1] if d else "data"
-            return jax.shard_map(
+            from repro import jax_compat
+
+            return jax_compat.shard_map(
                 lambda ta, xx, yy: ops.tm_train_step_matmul_local(
                     config, ta, xx, yy, seed
                 ),

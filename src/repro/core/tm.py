@@ -146,9 +146,37 @@ def class_sums(
     return out.astype(jnp.int32) @ vote_matrix(config)
 
 
-def predict(config: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
-    """Argmax classification (binary-tree comparison in the paper)."""
-    sums = class_sums(config, state.ta_state, literals(x), training=False)
+def predict(
+    config: TMConfig,
+    state: TMState,
+    x: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    **blocks,
+) -> jax.Array:
+    """Argmax classification (binary-tree comparison in the paper).
+
+    When the kernel path is active (``use_kernel=True`` or
+    ``REPRO_USE_PALLAS=1``) the sums come from the fused single-pass Pallas
+    kernel over packed literals (kernels/fused_infer.py); otherwise the
+    dense XLA path below.
+    """
+    from repro.kernels import ops
+
+    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    if uk:
+        from repro.core import packetizer
+
+        lw = packetizer.pack_literals(x)
+        iw = packetizer.pack_include_masks(state.ta_state)
+        nonempty = jnp.any(state.ta_state >= 0, axis=-1).astype(jnp.uint8)
+        sums = ops.tm_forward_packed(
+            lw, iw, vote_matrix(config), nonempty,
+            use_kernel=uk, interpret=it, **blocks,
+        )
+    else:
+        sums = class_sums(config, state.ta_state, literals(x), training=False)
     return jnp.argmax(sums, axis=-1)
 
 

@@ -1,0 +1,32 @@
+"""Version shims for core jax API drift.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg (``check_rep`` -> ``check_vma``);
+call through here so either jax generation works.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` (newer jax) with a psum(1) fallback: the size
+    of a named mesh axis from inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -1,0 +1,162 @@
+"""Block-size autotuner for the fused TM inference kernel.
+
+The fused kernel's throughput is a function of its ``(block_b, block_c,
+block_w)`` tiling, and the best tiling depends on problem shape and backend
+(VMEM budget, grid overhead, interpret vs compiled).  This module sweeps a
+small candidate grid once per ``(shape, backend)`` and memoizes the winner
+in an on-disk JSON cache so serving processes never re-pay the sweep.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.  Entries are keyed by
+``fused_infer:v1:<backend>:<interp|compiled>:B..C..W..K..`` so a TPU run
+never reads CPU-interpret timings and vice versa.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fused_infer
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_KEY_VERSION = "v1"
+
+# candidate tilings: a deliberately small grid — the sweep is paid once per
+# shape and cached, but each candidate costs a kernel compile.
+_DEFAULT_CANDIDATES = (
+    (128, 128, 64),   # clause_eval.py's defaults (VMEM-lean)
+    (128, 256, 64),   # wider clause bank: fewer adder-fold steps
+    (256, 128, 64),   # taller request slab: fewer batch steps
+    (256, 256, 32),
+    (512, 512, 16),   # few big tiles: minimal grid overhead (small models)
+    (64, 512, 64),
+)
+
+
+def cache_path() -> str:
+    p = os.environ.get(_CACHE_ENV)
+    if p:
+        return p
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def _load_cache() -> dict:
+    try:
+        with open(cache_path()) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_cache(cache: dict) -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    # os.replace keeps the file whole; concurrent tuners are last-writer-wins
+    # (worst case a lost entry's sweep is re-paid, never a torn file)
+    os.replace(tmp, path)
+
+
+def _shape_key(B, C, W, K, interpret, clipped_candidates) -> str:
+    mode = "interp" if interpret else "compiled"
+    backend = jax.default_backend()
+    # the candidate set is part of the key: a sweep over a restricted custom
+    # candidate list must not answer for the default sweep (or vice versa)
+    cands = ",".join("x".join(map(str, c)) for c in clipped_candidates)
+    return (f"fused_infer:{_KEY_VERSION}:{backend}:{mode}:"
+            f"B{B}:C{C}:W{W}:K{K}:cands[{cands}]")
+
+
+def _clip_candidate(blocks, B: int, C: int, W: int):
+    """Apply the same clipping the kernel wrapper does, so duplicate
+    post-clip candidates are swept only once."""
+    bb, bc, bw = blocks
+    bb = min(bb, fused_infer._rup(B, 8))
+    bc = min(bc, fused_infer._rup(C, 128))
+    bw = min(bw, W)
+    return bb, bc, bw
+
+
+def _sweep(lit, inc, votes, nonempty, candidates, *, interpret, reps) -> dict:
+    """min seconds per candidate tiling, timed round-robin so container
+    noise drifts over every candidate equally instead of biasing the sweep
+    order."""
+    runs = {}
+    for bb, bc, bw in candidates:
+        run = functools.partial(
+            fused_infer.fused_tm_forward, lit, inc, votes, nonempty,
+            block_b=bb, block_c=bc, block_w=bw, interpret=interpret,
+        )
+        run().block_until_ready()      # compile + warm
+        runs[(bb, bc, bw)] = run
+    best = {k: float("inf") for k in runs}
+    for _ in range(reps):
+        for k, run in runs.items():
+            t0 = time.perf_counter()
+            run().block_until_ready()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def autotune_fused_blocks(
+    B: int,
+    C: int,
+    W: int,
+    K: int,
+    *,
+    interpret: bool,
+    candidates=None,
+    reps: int = 5,
+    refresh: bool = False,
+) -> dict:
+    """Best ``{block_b, block_c, block_w}`` for a fused-inference shape.
+
+    Sweeps ``candidates`` on synthetic data of the given shape, memoizing
+    the winner on disk.  ``refresh=True`` ignores (and overwrites) any
+    cached entry.
+    """
+    clipped = []
+    for cand in candidates or _DEFAULT_CANDIDATES:
+        c = _clip_candidate(cand, B, C, W)
+        if c not in clipped:
+            clipped.append(c)
+
+    key = _shape_key(B, C, W, K, interpret, clipped)
+    cache = _load_cache()
+    if not refresh and key in cache:
+        return dict(cache[key]["blocks"])
+
+    rng = np.random.default_rng(0)
+    lit = jnp.asarray(rng.integers(0, 2**32, (B, W), dtype=np.uint32))
+    inc = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
+    votes = jnp.asarray(rng.integers(-2, 3, (C, K), dtype=np.int32))
+    nonempty = jnp.ones((C,), jnp.int32)
+
+    timings = _sweep(
+        lit, inc, votes, nonempty, clipped, interpret=interpret, reps=reps
+    )
+    # within the measurement noise floor, prefer the largest tiling: fewer
+    # grid steps is the structurally better config when timings can't
+    # separate the candidates
+    t_min = min(timings.values())
+    best_blocks = max(
+        (blk for blk, t in timings.items() if t <= t_min * 1.05),
+        key=lambda blk: blk[0] * blk[1] * blk[2],
+    )
+    best_t = timings[best_blocks]
+
+    bb, bc, bw = best_blocks
+    result = dict(block_b=bb, block_c=bc, block_w=bw)
+    cache = _load_cache()   # re-read to narrow the concurrent-writer window
+    cache[key] = dict(blocks=result, us_per_call=best_t * 1e6)
+    _save_cache(cache)
+    return result

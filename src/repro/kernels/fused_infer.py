@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: fused single-pass TM inference (clause eval + class sum).
+
+This is the whole MATADOR inference datapath of paper Fig. 5 in ONE
+``pallas_call`` — the Hard-Coded Clause Block chain feeding the class-sum
+adder bank with no off-chip traffic in between.  The unfused pipeline
+(``clause_eval.py`` then ``class_sum.py``) materializes the full ``(B, C)``
+fired matrix in HBM; the eFPGA (arXiv:2502.07823) and 65-nm ASIC
+(arXiv:2501.19347) TM accelerators both keep clause outputs on-chip, and so
+does this kernel: the fired block lives in VMEM scratch and is folded into
+the class-sum accumulator the moment its word chain completes.
+
+Grid-axis map onto the paper's Fig. 5 stages:
+
+  * axis 0 (``b``, parallel)   — datapoint packets: the Packetizer stream.
+    Each step owns a ``(block_b,)`` slab of requests.
+  * axis 1 (``c``, arbitrary)  — clause banks: which slice of the clause
+    array (HCB column) is being evaluated.  Sequential, because every bank
+    accumulates into the same ``(block_b, K)`` class-sum output block —
+    this is the 2xCL adder bank being time-multiplexed.
+  * axis 2 (``w``, arbitrary)  — the HCB chain itself: each step ANDs one
+    ``block_w``-word literal window into the carried clause state
+    (``Clause In``/``Clause Out`` in Fig. 5), held in VMEM scratch.
+    HCB 0 initializes all clauses to 1.
+
+On the last chain step the finished clause block is masked by the
+``nonempty`` vector (empty clauses output 0 at inference, paper §III) and
+folded into the int32 class sums via one MXU dot — the fired matrix never
+exists in HBM at any block size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat
+
+
+def _fused_infer_kernel(
+    lit_ref,    # (block_b, block_w) uint32 literal words
+    inc_ref,    # (block_c, block_w) uint32 include words
+    votes_ref,  # (block_c, Kp) int32 polarity votes
+    ne_ref,     # (1, block_c) int32 nonempty mask
+    out_ref,    # (block_b, Kp) int32 class-sum accumulator
+    ok_ref,     # VMEM scratch (block_b, block_c) int32 carried clause state
+    *,
+    block_w: int,
+):
+    c = pl.program_id(1)
+    w = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when((c == 0) & (w == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(w == 0)
+    def _init_ok():  # HCB 0: all clauses start at 1
+        ok_ref[...] = jnp.ones_like(ok_ref)
+
+    lit = lit_ref[...]
+    inc = inc_ref[...]
+
+    def body(i, ok):
+        l_w = jax.lax.dynamic_slice_in_dim(lit, i, 1, axis=1)   # (bb, 1)
+        i_w = jax.lax.dynamic_slice_in_dim(inc, i, 1, axis=1)   # (bc, 1)
+        viol = jnp.bitwise_and(i_w.reshape(1, -1), ~l_w)        # (bb, bc)
+        return ok & (viol == 0)
+
+    ok = jax.lax.fori_loop(0, block_w, body, ok_ref[...] != 0, unroll=True)
+
+    @pl.when(w < nw - 1)
+    def _carry():  # Clause Out -> next HCB's Clause In
+        ok_ref[...] = ok.astype(ok_ref.dtype)
+
+    @pl.when(w == nw - 1)
+    def _fold():  # adder bank: mask empties, accumulate the finished block
+        fired = (ok & (ne_ref[...] != 0)).astype(jnp.int32)     # (bb, bc)
+        out_ref[...] += jax.lax.dot_general(
+            fired, votes_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_c", "block_w", "interpret"),
+)
+def fused_tm_forward(
+    lit_words: jax.Array,           # (B, W) uint32
+    inc_words: jax.Array,           # (C, W) uint32
+    votes: jax.Array,               # (C, K) int32
+    nonempty: jax.Array | None = None,   # (C,) {0,1}; None = no masking
+    *,
+    block_b: int = 128,
+    block_c: int = 128,
+    block_w: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed literals -> (B, K) int32 class sums, single fused pass.
+
+    Bit-identical to ``class_sum_ref(clause_fire_ref(lit, inc) * nonempty,
+    votes)``; with ``nonempty=None`` to the unmasked (training-semantics)
+    composition.
+    """
+    B, W = lit_words.shape
+    C, Wc = inc_words.shape
+    K = votes.shape[1]
+    assert W == Wc, (W, Wc)
+    assert votes.shape[0] == C, (votes.shape, C)
+
+    if nonempty is None:
+        nonempty = jnp.ones((C,), jnp.int32)
+
+    block_b = min(block_b, _rup(B, 8))
+    block_c = min(block_c, _rup(C, 128))
+    block_w = min(block_w, W)
+
+    Bp, Cp, Wp = _rup(B, block_b), _rup(C, block_c), _rup(W, block_w)
+    Kp = _rup(K, 128)
+    lit = _pad2(lit_words, Bp, Wp)
+    inc = _pad2(inc_words, Cp, Wp)      # zero include words never violate
+    vts = _pad2(votes.astype(jnp.int32), Cp, Kp)   # padded clauses vote 0
+    ne = jnp.pad(nonempty.astype(jnp.int32), (0, Cp - C))[None, :]  # (1, Cp)
+
+    grid = (Bp // block_b, Cp // block_c, Wp // block_w)
+    out = pl.pallas_call(
+        functools.partial(_fused_infer_kernel, block_w=block_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_w), lambda b, c, w: (b, w)),
+            pl.BlockSpec((block_c, block_w), lambda b, c, w: (c, w)),
+            pl.BlockSpec((block_c, Kp), lambda b, c, w: (c, 0)),
+            pl.BlockSpec((1, block_c), lambda b, c, w: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((block_b, Kp), lambda b, c, w: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Kp), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.int32)],
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(lit, inc, vts, ne)
+    return out[:B, :K]
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2(x: jax.Array, d0: int, d1: int) -> jax.Array:
+    return jnp.pad(x, ((0, d0 - x.shape[0]), (0, d1 - x.shape[1])))

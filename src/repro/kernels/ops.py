@@ -16,8 +16,11 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import jax_compat
+
 from repro.kernels import class_sum as _class_sum_kernel
 from repro.kernels import clause_eval as _clause_eval_kernel
+from repro.kernels import fused_infer as _fused_infer_kernel
 from repro.kernels import ref
 from repro.kernels import ta_update as _ta_update_kernel
 from repro.kernels import xnor_popcount as _xnor_kernel
@@ -32,6 +35,12 @@ def _resolve(use_kernel, interpret):
     if interpret is None:
         interpret = not _ON_TPU
     return use_kernel, interpret
+
+
+def kernel_dispatch(use_kernel=None, interpret=None):
+    """Public resolver for callers that branch on the dispatch decision
+    (serve loop, compiled-artifact runner): (use_kernel, interpret)."""
+    return _resolve(use_kernel, interpret)
 
 
 def clause_fire(
@@ -106,13 +115,43 @@ def tm_forward_packed(
     inc_words: jax.Array,    # (C, W)
     votes: jax.Array,        # (C, K)
     nonempty: jax.Array | None = None,  # (C,) uint8; None = training semantics
-    **kw,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    fuse: bool = True,
+    autotune: bool = False,
+    **blocks,
 ) -> jax.Array:
-    """Packed literals -> (B, K) class sums (HCB chain + adder bank + mask)."""
-    fired = clause_fire(lit_words, inc_words, **kw)
+    """Packed literals -> (B, K) class sums (HCB chain + adder bank + mask).
+
+    Kernel path (``use_kernel=True`` or ``REPRO_USE_PALLAS=1``) runs the
+    fused single-pass kernel (``fused_infer.py``) — clause eval and vote
+    accumulation in one ``pallas_call``, no (B, C) fired matrix in HBM.
+    ``fuse=False`` keeps the legacy two-kernel pipeline; the oracle path is
+    the default execution engine off-TPU.  ``autotune=True`` (kernel path,
+    no explicit blocks) picks block sizes via ``autotune.py``'s cached sweep.
+    """
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel and fuse:
+        if autotune and not blocks:
+            from repro.kernels import autotune as _autotune
+
+            B, W = lit_words.shape
+            C, K = votes.shape
+            blocks = _autotune.autotune_fused_blocks(
+                B, C, W, K, interpret=interpret
+            )
+        return _fused_infer_kernel.fused_tm_forward(
+            lit_words, inc_words, votes, nonempty, interpret=interpret, **blocks
+        )
+    kw = dict(use_kernel=use_kernel, interpret=interpret)
+    cf_blocks = {k: v for k, v in blocks.items()
+                 if k in ("block_b", "block_c", "block_w")}
+    cs_blocks = {k: v for k, v in blocks.items() if k in ("block_b", "block_c")}
+    fired = clause_fire(lit_words, inc_words, **kw, **cf_blocks)
     if nonempty is not None:
         fired = fired * nonempty[None, :].astype(fired.dtype)
-    return class_sums(fired, votes, **kw)
+    return class_sums(fired, votes, **kw, **cs_blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -353,7 +392,7 @@ def tm_train_step_matmul_local(
 
     di = jax.lax.axis_index("data")
     mi = jax.lax.axis_index("model")
-    n_data = jax.lax.axis_size("data")
+    n_data = jax_compat.axis_size("data")
     C_loc, L_loc = ta_loc.shape
     B_loc = x_loc.shape[0]
     b_off = di * B_loc

@@ -1,0 +1,12 @@
+"""Version shims for `jax.experimental.pallas.tpu` API drift.
+
+jax renamed ``TPUCompilerParams`` to ``CompilerParams`` (and back-compat
+varies by release); every kernel in this package imports the symbol from
+here so the repo tracks whichever name the installed jax exposes.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -217,6 +217,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *, smoke: bool = False)
     rec = report.as_dict()
     rec["lower_seconds"] = t_lower
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else None
     rec["xla_cost_flops"] = float(ca.get("flops", 0.0)) if ca else 0.0
     return rec
 

@@ -20,9 +20,19 @@ import numpy as np
 
 
 def serve_tm(args) -> None:
+    """Chunked streaming TM serve loop.
+
+    Requests stream through fixed-size buckets of ``--bucket`` datapoints:
+    one jit trace (bucket-shaped input, donated on accelerators) serves any
+    request count — the last bucket is zero-padded, never retraced.  With
+    the kernel path active (``REPRO_USE_PALLAS=1`` / TPU) each bucket runs
+    the fused single-pass inference kernel; ``--autotune`` picks its block
+    sizes from the cached sweep (kernels/autotune.py).
+    """
     from repro.configs.matador_tm import TM_CONFIGS
     from repro.core import compiler, packetizer, tm, train
     from repro.data import make_boolean_classification
+    from repro.kernels import ops
 
     config = TM_CONFIGS[args.arch]
     X, y = make_boolean_classification(
@@ -36,19 +46,49 @@ def serve_tm(args) -> None:
     compiled = compiler.compile_tm(config, state.ta_state)
     print("compile stats:", compiled.stats.as_dict())
 
+    bucket = args.bucket
+    use_kernel, interpret = ops.kernel_dispatch()
+    blocks = {}
+    if use_kernel and args.autotune:
+        from repro.kernels import autotune
+
+        blocks = autotune.autotune_fused_blocks(
+            bucket, compiled.n_unique, compiled.n_words_active,
+            compiled.n_classes, interpret=interpret,
+        )
+        print("autotuned blocks:", blocks)
+
+    # donation recycles each bucket's literal buffer on accelerators
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    run_bucket = jax.jit(
+        lambda xw: compiler.run_compiled(compiled, xw, **blocks).argmax(-1),
+        donate_argnums=donate,
+    )
+
     Xr, _ = make_boolean_classification(
         args.requests, config.n_features, config.n_classes, seed=2
     )
-    xp = packetizer.pack_literals(jnp.asarray(Xr))
-    run = jax.jit(lambda xw: compiler.run_compiled(compiled, xw).argmax(-1))
-    run(xp[:8]).block_until_ready()            # warm
+    xp = np.asarray(packetizer.pack_literals(jnp.asarray(Xr)))
+    n = xp.shape[0]
+    n_buckets = (n + bucket - 1) // bucket
+    xp = np.pad(xp, ((0, n_buckets * bucket - n), (0, 0)))
+
+    run_bucket(jnp.asarray(xp[:bucket])).block_until_ready()   # warm (1 trace)
     t0 = time.perf_counter()
-    preds = run(xp).block_until_ready()
+    outs = [
+        run_bucket(jnp.asarray(xp[i * bucket:(i + 1) * bucket]))
+        for i in range(n_buckets)
+    ]
+    for o in outs:                      # drain the in-flight stream
+        o.block_until_ready()
     dt = time.perf_counter() - t0
-    print(f"{args.requests} inferences in {dt * 1e3:.2f} ms "
-          f"({args.requests / dt:,.0f} inf/s, {dt / args.requests * 1e6:.2f} us/inf)")
-    acc = float((np.asarray(preds) == 0).mean())  # placeholder label-free run
-    _ = acc
+    preds = np.concatenate([np.asarray(o) for o in outs])[:n]
+    path = "fused-kernel" if use_kernel else "oracle"
+    print(f"{n} inferences in {n_buckets} buckets of {bucket} [{path}] "
+          f"in {dt * 1e3:.2f} ms ({n / dt:,.0f} inf/s, "
+          f"{dt / n * 1e6:.2f} us/inf)")
+    hist = np.bincount(preds, minlength=config.n_classes)
+    print("pred class histogram:", hist.tolist())
 
 
 def serve_lm(args) -> None:
@@ -95,6 +135,10 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--bucket", type=int, default=512,
+                    help="TM streaming bucket size (one jit trace per run)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="autotune fused-kernel block sizes for the bucket shape")
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--n-train", type=int, default=2000)
     ap.add_argument("--batch-size", type=int, default=4)

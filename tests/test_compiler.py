@@ -1,4 +1,9 @@
-"""Boolean-to-silicon compiler: equivalence + compaction properties."""
+"""Boolean-to-silicon compiler: equivalence + compaction properties.
+
+``hypothesis`` is optional: when installed, the two central properties run
+as real property tests; otherwise fixed-seed parametrized fallbacks keep
+the same checks in the tier-1 suite.
+"""
 
 import os
 import tempfile
@@ -6,7 +11,13 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 container has no hypothesis
+    HAVE_HYPOTHESIS = False
 
 from repro.core import compiler, packetizer, tm
 
@@ -23,15 +34,7 @@ def _random_tm(n_features, n_classes, cpc, include_density, seed):
     return cfg, ta
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n_features=st.integers(3, 80),
-    n_classes=st.integers(2, 5),
-    cpc=st.integers(2, 12),
-    density=st.floats(0.0, 0.3),
-    seed=st.integers(0, 10_000),
-)
-def test_compiled_equals_dense(n_features, n_classes, cpc, density, seed):
+def _check_compiled_equals_dense(n_features, n_classes, cpc, density, seed):
     """The central correctness property: the compacted artifact classifies
     identically to dense inference, for any automata state."""
     cfg, ta = _random_tm(n_features, n_classes, cpc, density, seed)
@@ -45,9 +48,7 @@ def test_compiled_equals_dense(n_features, n_classes, cpc, density, seed):
     np.testing.assert_array_equal(np.asarray(dense_sums), np.asarray(comp_sums))
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 1000))
-def test_dont_touch_equals_optimized(seed):
+def _check_dont_touch_equals_optimized(seed):
     """Fig. 8 analog: disabling the optimizations changes resources, never
     results."""
     cfg, ta = _random_tm(40, 3, 8, 0.1, seed)
@@ -61,6 +62,44 @@ def test_dont_touch_equals_optimized(seed):
     )
     assert opt.n_unique <= dt.n_unique
     assert opt.n_words_active <= dt.n_words_active
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_features=st.integers(3, 80),
+        n_classes=st.integers(2, 5),
+        cpc=st.integers(2, 12),
+        density=st.floats(0.0, 0.3),
+        seed=st.integers(0, 10_000),
+    )
+    def test_compiled_equals_dense(n_features, n_classes, cpc, density, seed):
+        _check_compiled_equals_dense(n_features, n_classes, cpc, density, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_dont_touch_equals_optimized(seed):
+        _check_dont_touch_equals_optimized(seed)
+
+
+@pytest.mark.parametrize(
+    "n_features,n_classes,cpc,density,seed",
+    [
+        (3, 2, 2, 0.0, 0),         # tiny + all-empty bank
+        (17, 3, 5, 0.05, 11),      # sparse ragged
+        (80, 5, 12, 0.3, 4242),    # dense upper corner
+        (33, 2, 7, 0.15, 977),
+    ],
+)
+def test_compiled_equals_dense_fixed(n_features, n_classes, cpc, density, seed):
+    """Fixed-seed fallback for the central property (always runs)."""
+    _check_compiled_equals_dense(n_features, n_classes, cpc, density, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_dont_touch_equals_optimized_fixed(seed):
+    """Fixed-seed fallback for the Fig. 8 property (always runs)."""
+    _check_dont_touch_equals_optimized(seed)
 
 
 def test_stats_invariants():
@@ -108,9 +147,32 @@ def test_save_load_roundtrip():
 
 
 def test_kernel_path_equivalence():
+    """oracle == fused single-pass kernel == unfused two-kernel pipeline."""
     cfg, ta = _random_tm(100, 4, 16, 0.08, 3)
     comp = compiler.compile_tm(cfg, ta)
     x = jnp.asarray(np.random.default_rng(0).integers(0, 2, (12, 100), dtype=np.uint8))
     a = compiler.predict_compiled(comp, x, use_kernel=False)
     b = compiler.predict_compiled(comp, x, use_kernel=True, interpret=True)
+    c = compiler.predict_compiled(comp, x, use_kernel=True, interpret=True,
+                                  fuse=False)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_run_compiled_dispatch_defaults():
+    """run_compiled defers to ops._resolve: off-TPU defaults to the oracle
+    path with interpret resolved (no unconditional interpret=True), and
+    explicit kernel dispatch matches it bit-for-bit."""
+    from repro.kernels import ops
+
+    cfg, ta = _random_tm(24, 3, 6, 0.12, 9)
+    comp = compiler.compile_tm(cfg, ta)
+    xp = packetizer.pack_literals(
+        jnp.asarray(np.random.default_rng(1).integers(0, 2, (9, 24), dtype=np.uint8))
+    )
+    uk, it = ops.kernel_dispatch()
+    default = compiler.run_compiled(comp, xp)
+    explicit = compiler.run_compiled(comp, xp, use_kernel=uk, interpret=it)
+    kernel = compiler.run_compiled(comp, xp, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(explicit))
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(kernel))

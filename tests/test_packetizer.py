@@ -1,41 +1,70 @@
-"""Property tests for the bandwidth-driven packetizer (paper Fig. 4)."""
+"""Property tests for the bandwidth-driven packetizer (paper Fig. 4).
+
+``hypothesis`` is optional: fixed-seed fallbacks cover the same roundtrip
+properties when it is not installed.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import packetizer, tm
 
 
-bits_arrays = st.integers(1, 4).flatmap(
-    lambda b: st.integers(1, 200).flatmap(
-        lambda l: st.lists(
-            st.lists(st.integers(0, 1), min_size=l, max_size=l),
-            min_size=b, max_size=b,
-        )
-    )
-)
-
-
-@settings(max_examples=30, deadline=None)
-@given(bits_arrays)
-def test_pack_unpack_roundtrip(bits):
-    arr = np.array(bits, dtype=np.uint8)
+def _check_pack_unpack_roundtrip(arr):
     words = packetizer.pack_bits(jnp.asarray(arr))
     back = packetizer.unpack_bits(words, arr.shape[-1])
     np.testing.assert_array_equal(np.asarray(back), arr)
 
 
-@settings(max_examples=30, deadline=None)
-@given(bits_arrays)
-def test_np_and_jnp_twins_agree(bits):
-    arr = np.array(bits, dtype=np.uint8)
+def _check_np_and_jnp_twins_agree(arr):
     w_np = packetizer.pack_bits_np(arr)
     w_j = np.asarray(packetizer.pack_bits(jnp.asarray(arr)))
     np.testing.assert_array_equal(w_np, w_j)
     np.testing.assert_array_equal(
         packetizer.unpack_bits_np(w_np, arr.shape[-1]), arr
     )
+
+
+if HAVE_HYPOTHESIS:
+    bits_arrays = st.integers(1, 4).flatmap(
+        lambda b: st.integers(1, 200).flatmap(
+            lambda l: st.lists(
+                st.lists(st.integers(0, 1), min_size=l, max_size=l),
+                min_size=b, max_size=b,
+            )
+        )
+    )
+
+    @settings(max_examples=30, deadline=None)
+    @given(bits_arrays)
+    def test_pack_unpack_roundtrip(bits):
+        _check_pack_unpack_roundtrip(np.array(bits, dtype=np.uint8))
+
+    @settings(max_examples=30, deadline=None)
+    @given(bits_arrays)
+    def test_np_and_jnp_twins_agree(bits):
+        _check_np_and_jnp_twins_agree(np.array(bits, dtype=np.uint8))
+
+
+@pytest.mark.parametrize("b,l,seed", [(1, 1, 0), (3, 31, 1), (4, 32, 2),
+                                      (2, 33, 3), (4, 200, 4)])
+def test_pack_unpack_roundtrip_fixed(b, l, seed):
+    arr = np.random.default_rng(seed).integers(0, 2, (b, l), dtype=np.uint8)
+    _check_pack_unpack_roundtrip(arr)
+
+
+@pytest.mark.parametrize("b,l,seed", [(1, 1, 5), (3, 31, 6), (4, 32, 7),
+                                      (2, 33, 8), (4, 200, 9)])
+def test_np_and_jnp_twins_agree_fixed(b, l, seed):
+    arr = np.random.default_rng(seed).integers(0, 2, (b, l), dtype=np.uint8)
+    _check_np_and_jnp_twins_agree(arr)
 
 
 def test_lsb_first_layout():
