@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   * fusedinfer_* — fused single-pass inference kernel vs the unfused
     two-kernel pipeline vs the jnp oracle (also written, with metadata,
     to BENCH_fused_infer.json — the cross-PR perf trajectory file)
+  * fusedtrain_* — fused single-pass TRAINING kernel (clause fire ->
+    feedback -> TA delta in one pallas_call) vs the three-dispatch
+    pipeline vs the jnp oracle (-> BENCH_fused_train.json)
   * roofline_* — per dry-run cell roofline terms (deliverable g)
 """
 
@@ -65,8 +68,8 @@ def main() -> None:
                     help="skip the slow train-from-scratch tables")
     args = ap.parse_args()
 
-    from benchmarks import (fused_infer, hcb_pipeline, logic_sharing,
-                            roofline_report, table1_inference)
+    from benchmarks import (fused_infer, fused_train, hcb_pipeline,
+                            logic_sharing, roofline_report, table1_inference)
 
     rows = []
     rows += _tm_core_micro()
@@ -74,6 +77,9 @@ def main() -> None:
     fused_rows = fused_infer.run(fast=args.fast)
     fused_infer.write_report(fused_rows)
     rows += fused_rows
+    train_rows = fused_train.run(fast=args.fast)
+    fused_train.write_report(train_rows)
+    rows += train_rows
     if not args.fast:
         rows += table1_inference.run("mnist")
         rows += logic_sharing.run("mnist")

@@ -1,15 +1,24 @@
-"""Fast fused-vs-unfused inference microbenchmark -> BENCH_fused_infer.json.
+"""Fast fused-kernel microbenchmarks -> BENCH_fused_infer.json +
+BENCH_fused_train.json.
 
-    PYTHONPATH=src python scripts/bench_smoke.py [--full] [--reps N] [--no-autotune]
+    PYTHONPATH=src python scripts/bench_smoke.py [--full] [--reps N]
+        [--no-autotune] [--only {infer,train}]
 
-A CI-sized smoke of the fused single-pass TM inference kernel
-(src/repro/kernels/fused_infer.py) against the legacy two-kernel pipeline
-and the jnp oracle on identical shapes.  Appends nothing: each run rewrites
-``BENCH_fused_infer.json`` with fresh numbers + backend metadata, so the
-perf trajectory of the fused kernel is a per-PR diffable artifact.
+A CI-sized smoke of the fused single-pass TM kernels against their legacy
+pipelines and the jnp oracles on identical shapes:
 
-The fused row runs at the block tiling chosen by the autotuner's cached
-sweep (kernels/autotune.py); ``--no-autotune`` pins the kernel defaults.
+  * inference (src/repro/kernels/fused_infer.py) vs the two-kernel
+    clause_eval -> class_sum pipeline -> ``BENCH_fused_infer.json``
+  * training (src/repro/kernels/fused_train.py: clause fire -> feedback ->
+    TA delta in one pallas_call) vs the three-dispatch pipeline ->
+    ``BENCH_fused_train.json``
+
+Appends nothing: each run rewrites the report files with fresh numbers +
+backend metadata, so the perf trajectory of the fused kernels is a per-PR
+diffable artifact.
+
+The fused rows run at the block tilings chosen by the autotuner's cached
+sweeps (kernels/autotune.py); ``--no-autotune`` pins the kernel defaults.
 """
 
 from __future__ import annotations
@@ -28,21 +37,38 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="run every benchmark shape, not just the smoke one")
     ap.add_argument("--reps", type=int, default=8)
+    ap.add_argument("--train-reps", type=int, default=3,
+                    help="rounds for the (heavier) training benchmark")
     ap.add_argument("--out", default="BENCH_fused_infer.json")
+    ap.add_argument("--out-train", default="BENCH_fused_train.json")
     ap.add_argument("--no-autotune", action="store_true",
                     help="use default fused block sizes instead of the "
                          "cached autotuner sweep")
+    ap.add_argument("--only", choices=("infer", "train"), default=None,
+                    help="run just one of the two benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import fused_infer
+    from benchmarks import fused_infer, fused_train
 
-    rows = fused_infer.run(fast=not args.full, reps=args.reps,
-                           autotune=not args.no_autotune)
-    fused_infer.write_report(rows, args.out)
+    rows = []
+    if args.only in (None, "infer"):
+        infer_rows = fused_infer.run(fast=not args.full, reps=args.reps,
+                                     autotune=not args.no_autotune)
+        fused_infer.write_report(infer_rows, args.out)
+        rows += infer_rows
+    if args.only in (None, "train"):
+        train_rows = fused_train.run(fast=not args.full, reps=args.train_reps,
+                                     autotune=not args.no_autotune)
+        fused_train.write_report(train_rows, args.out_train)
+        rows += train_rows
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
-    print(f"wrote {args.out}")
+    if args.only in (None, "infer"):
+        print(f"wrote {args.out}")
+    if args.only in (None, "train"):
+        print(f"wrote {args.out_train}")
 
 
 if __name__ == "__main__":

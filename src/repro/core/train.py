@@ -35,6 +35,34 @@ def train_step(
     return new_state, metrics
 
 
+@functools.partial(jax.jit, static_argnums=(0, 5, 6), donate_argnums=1)
+def train_step_kernel(
+    config: tm.TMConfig, state: tm.TMState, x: jax.Array, y: jax.Array,
+    seed: jax.Array, batch_chunk: int | None = None, fuse: bool = True,
+) -> Tuple[tm.TMState, dict]:
+    """Kernel-path batch step (hash RNG; fused Pallas pipeline by default).
+
+    Same contract as :func:`train_step` but driven by ``ops.
+    tm_train_step_kernel`` — on the kernel path the whole step is two
+    fused ``pallas_call`` launches (class sums, then clause-fire ->
+    feedback -> TA delta with nothing spilled to HBM).  ``state`` is
+    donated so the int8 automata bank is updated in place across long
+    ``fit`` runs instead of double-buffering.
+    """
+    from repro.kernels import ops
+
+    new_ta, delta = ops.tm_train_step_kernel(
+        config, state.ta_state, x, y, seed,
+        batch_chunk=batch_chunk, fuse=fuse,
+    )
+    new_state = tm.TMState(ta_state=new_ta, steps=state.steps + 1)
+    metrics = {
+        "delta_abs_sum": jnp.sum(jnp.abs(delta)),
+        "include_frac": jnp.mean((new_ta >= 0).astype(jnp.float32)),
+    }
+    return new_state, metrics
+
+
 @functools.partial(jax.jit, static_argnums=0)
 def eval_step(
     config: tm.TMConfig, state: tm.TMState, x: jax.Array, y: jax.Array
@@ -54,17 +82,40 @@ def fit(
     x_val=None,
     y_val=None,
     log_every: int = 0,
+    engine: str = "jnp",
+    batch_chunk: int | None = None,
 ) -> tm.TMState:
-    """Simple host loop used by examples/tests (the GUI "Train" button)."""
+    """Simple host loop used by examples/tests (the GUI "Train" button).
+
+    The batch stream is pre-shuffled ONCE per epoch on device (one gather
+    of ``x``/``y``), so the inner loop slices contiguous device buffers
+    instead of re-gathering ``x[idx]`` every step; the TA state is donated
+    through both step functions, so long runs keep a single automata
+    buffer alive instead of double-buffering.
+
+    ``engine="jnp"`` runs the per-sample jax.random step (paper-faithful
+    sequential semantics, batch-accumulated); ``engine="kernel"`` runs the
+    hash-RNG kernel-path step (fused Pallas pipeline on the kernel path),
+    seeded by the global step index so runs are reproducible.
+    """
     n = x.shape[0]
     steps_per_epoch = max(1, n // batch_size)
+    gstep = 0
     for ep in range(epochs):
         rng, rp = jax.random.split(rng)
         perm = jax.random.permutation(rp, n)
+        xs, ys = x[perm], y[perm]        # one device-side shuffle per epoch
         for i in range(steps_per_epoch):
-            idx = perm[i * batch_size : (i + 1) * batch_size]
+            xb = xs[i * batch_size : (i + 1) * batch_size]
+            yb = ys[i * batch_size : (i + 1) * batch_size]
             rng, rs = jax.random.split(rng)
-            state, _ = train_step(config, state, x[idx], y[idx], rs)
+            if engine == "kernel":
+                state, _ = train_step_kernel(
+                    config, state, xb, yb, jnp.uint32(gstep), batch_chunk
+                )
+            else:
+                state, _ = train_step(config, state, xb, yb, rs)
+            gstep += 1
         if log_every and (ep + 1) % log_every == 0 and x_val is not None:
             acc = eval_step(config, state, x_val, y_val)
             print(f"epoch {ep + 1}: val_acc={float(acc):.4f}")

@@ -1,15 +1,20 @@
-"""Block-size autotuner for the fused TM inference kernel.
+"""Block-size autotuner for the fused TM Pallas kernels.
 
-The fused kernel's throughput is a function of its ``(block_b, block_c,
+A fused kernel's throughput is a function of its ``(block_b, block_c,
 block_w)`` tiling, and the best tiling depends on problem shape and backend
 (VMEM budget, grid overhead, interpret vs compiled).  This module sweeps a
-small candidate grid once per ``(shape, backend)`` and memoizes the winner
-in an on-disk JSON cache so serving processes never re-pay the sweep.
+small candidate grid once per ``(kernel, shape, backend)`` and memoizes the
+winner in an on-disk JSON cache so serving/training processes never re-pay
+the sweep.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
-``~/.cache/repro/autotune.json``.  Entries are keyed by
-``fused_infer:v1:<backend>:<interp|compiled>:B..C..W..K..`` so a TPU run
-never reads CPU-interpret timings and vice versa.
+``~/.cache/repro/autotune.json``.  The file is ``{"schema": N, "entries":
+{...}}``; a schema mismatch (older repo version, foreign writer, corrupt
+file) invalidates the whole cache instead of crashing or silently reusing
+blocks tuned for a different kernel signature.  Entries are keyed by
+``<kernel>:v1:<backend>:<interp|compiled>:<shape>:cands[...]`` so a TPU run
+never reads CPU-interpret timings, inference timings never answer for
+training shapes, and vice versa.
 """
 
 from __future__ import annotations
@@ -23,10 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import fused_infer
+from repro.kernels import fused_infer, fused_train
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _KEY_VERSION = "v1"
+# Bump when the on-disk layout (or the meaning of cached blocks) changes:
+# schema 1 was the bare key->entry dict; schema 2 wraps it in
+# {"schema", "entries"} so stale caches are detectable.
+_SCHEMA_VERSION = 2
 
 # candidate tilings: a deliberately small grid — the sweep is paid once per
 # shape and cached, but each candidate costs a kernel compile.
@@ -39,6 +48,16 @@ _DEFAULT_CANDIDATES = (
     (64, 512, 64),
 )
 
+# training kernel candidates: the delta accumulator block is (block_c, L),
+# so block_c also scales VMEM; block_b scales the fire/ftype scratch.
+_TRAIN_CANDIDATES = (
+    (128, 256, 64),   # fused_train.py defaults
+    (128, 128, 64),
+    (256, 256, 64),
+    (64, 512, 64),
+    (256, 512, 32),
+)
+
 
 def cache_path() -> str:
     p = os.environ.get(_CACHE_ENV)
@@ -48,36 +67,32 @@ def cache_path() -> str:
 
 
 def _load_cache() -> dict:
+    """Entry dict from disk; {} on missing, corrupt, or stale-schema files."""
     try:
         with open(cache_path()) as f:
-            return json.load(f)
+            raw = json.load(f)
     except (OSError, ValueError):
         return {}
+    if not isinstance(raw, dict) or raw.get("schema") != _SCHEMA_VERSION:
+        return {}   # stale schema: invalidate, never reuse or crash
+    entries = raw.get("entries")
+    return entries if isinstance(entries, dict) else {}
 
 
-def _save_cache(cache: dict) -> None:
+def _save_cache(entries: dict) -> None:
     path = cache_path()
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
-        json.dump(cache, f, indent=1, sort_keys=True)
+        json.dump({"schema": _SCHEMA_VERSION, "entries": entries},
+                  f, indent=1, sort_keys=True)
     # os.replace keeps the file whole; concurrent tuners are last-writer-wins
     # (worst case a lost entry's sweep is re-paid, never a torn file)
     os.replace(tmp, path)
 
 
-def _shape_key(B, C, W, K, interpret, clipped_candidates) -> str:
-    mode = "interp" if interpret else "compiled"
-    backend = jax.default_backend()
-    # the candidate set is part of the key: a sweep over a restricted custom
-    # candidate list must not answer for the default sweep (or vice versa)
-    cands = ",".join("x".join(map(str, c)) for c in clipped_candidates)
-    return (f"fused_infer:{_KEY_VERSION}:{backend}:{mode}:"
-            f"B{B}:C{C}:W{W}:K{K}:cands[{cands}]")
-
-
 def _clip_candidate(blocks, B: int, C: int, W: int):
-    """Apply the same clipping the kernel wrapper does, so duplicate
+    """Apply the same clipping the kernel wrappers do, so duplicate
     post-clip candidates are swept only once."""
     bb, bc, bw = blocks
     bb = min(bb, fused_infer._rup(B, 8))
@@ -86,18 +101,21 @@ def _clip_candidate(blocks, B: int, C: int, W: int):
     return bb, bc, bw
 
 
-def _sweep(lit, inc, votes, nonempty, candidates, *, interpret, reps) -> dict:
+def _clipped(candidates, B, C, W):
+    out = []
+    for cand in candidates:
+        c = _clip_candidate(cand, B, C, W)
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def _sweep(runs: dict, reps: int) -> dict:
     """min seconds per candidate tiling, timed round-robin so container
     noise drifts over every candidate equally instead of biasing the sweep
     order."""
-    runs = {}
-    for bb, bc, bw in candidates:
-        run = functools.partial(
-            fused_infer.fused_tm_forward, lit, inc, votes, nonempty,
-            block_b=bb, block_c=bc, block_w=bw, interpret=interpret,
-        )
+    for run in runs.values():
         run().block_until_ready()      # compile + warm
-        runs[(bb, bc, bw)] = run
     best = {k: float("inf") for k in runs}
     for _ in range(reps):
         for k, run in runs.items():
@@ -105,6 +123,51 @@ def _sweep(lit, inc, votes, nonempty, candidates, *, interpret, reps) -> dict:
             run().block_until_ready()
             best[k] = min(best[k], time.perf_counter() - t0)
     return best
+
+
+# in-process memo so hot loops (e.g. launch/train.py --autotune calling the
+# resolver every step) never re-read and re-parse the on-disk JSON; keyed by
+# (cache file, entry) so switching $REPRO_AUTOTUNE_CACHE mid-process works.
+_PROC_CACHE: dict = {}
+
+
+def _memoized_best(key: str, make_runs, reps: int, refresh: bool) -> dict:
+    """Sweep (or recall) the best {block_b, block_c, block_w} for `key`."""
+    pkey = (cache_path(), key)
+    if not refresh and pkey in _PROC_CACHE:
+        return dict(_PROC_CACHE[pkey])
+    cache = _load_cache()
+    if not refresh and key in cache:
+        _PROC_CACHE[pkey] = dict(cache[key]["blocks"])
+        return dict(cache[key]["blocks"])
+
+    timings = _sweep(make_runs(), reps)
+    # within the measurement noise floor, prefer the largest tiling: fewer
+    # grid steps is the structurally better config when timings can't
+    # separate the candidates
+    t_min = min(timings.values())
+    best_blocks = max(
+        (blk for blk, t in timings.items() if t <= t_min * 1.05),
+        key=lambda blk: blk[0] * blk[1] * blk[2],
+    )
+    bb, bc, bw = best_blocks
+    result = dict(block_b=bb, block_c=bc, block_w=bw)
+    cache = _load_cache()   # re-read to narrow the concurrent-writer window
+    cache[key] = dict(blocks=result, us_per_call=timings[best_blocks] * 1e6)
+    _save_cache(cache)
+    _PROC_CACHE[pkey] = dict(result)
+    return result
+
+
+def _mode_backend(interpret: bool) -> str:
+    mode = "interp" if interpret else "compiled"
+    return f"{jax.default_backend()}:{mode}"
+
+
+def _cands_tag(clipped) -> str:
+    # the candidate set is part of the key: a sweep over a restricted custom
+    # candidate list must not answer for the default sweep (or vice versa)
+    return ",".join("x".join(map(str, c)) for c in clipped)
 
 
 def autotune_fused_blocks(
@@ -118,45 +181,86 @@ def autotune_fused_blocks(
     reps: int = 5,
     refresh: bool = False,
 ) -> dict:
-    """Best ``{block_b, block_c, block_w}`` for a fused-inference shape.
+    """Best ``{block_b, block_c, block_w}`` for a fused-INFERENCE shape.
 
     Sweeps ``candidates`` on synthetic data of the given shape, memoizing
     the winner on disk.  ``refresh=True`` ignores (and overwrites) any
     cached entry.
     """
-    clipped = []
-    for cand in candidates or _DEFAULT_CANDIDATES:
-        c = _clip_candidate(cand, B, C, W)
-        if c not in clipped:
-            clipped.append(c)
+    clipped = _clipped(candidates or _DEFAULT_CANDIDATES, B, C, W)
+    key = (f"fused_infer:{_KEY_VERSION}:{_mode_backend(interpret)}:"
+           f"B{B}:C{C}:W{W}:K{K}:cands[{_cands_tag(clipped)}]")
 
-    key = _shape_key(B, C, W, K, interpret, clipped)
-    cache = _load_cache()
-    if not refresh and key in cache:
-        return dict(cache[key]["blocks"])
+    def make_runs():
+        rng = np.random.default_rng(0)
+        lit = jnp.asarray(rng.integers(0, 2**32, (B, W), dtype=np.uint32))
+        inc = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
+        votes = jnp.asarray(rng.integers(-2, 3, (C, K), dtype=np.int32))
+        nonempty = jnp.ones((C,), jnp.int32)
+        return {
+            (bb, bc, bw): functools.partial(
+                fused_infer.fused_tm_forward, lit, inc, votes, nonempty,
+                block_b=bb, block_c=bc, block_w=bw, interpret=interpret,
+            )
+            for bb, bc, bw in clipped
+        }
 
-    rng = np.random.default_rng(0)
-    lit = jnp.asarray(rng.integers(0, 2**32, (B, W), dtype=np.uint32))
-    inc = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
-    votes = jnp.asarray(rng.integers(-2, 3, (C, K), dtype=np.int32))
-    nonempty = jnp.ones((C,), jnp.int32)
+    return _memoized_best(key, make_runs, reps, refresh)
 
-    timings = _sweep(
-        lit, inc, votes, nonempty, clipped, interpret=interpret, reps=reps
-    )
-    # within the measurement noise floor, prefer the largest tiling: fewer
-    # grid steps is the structurally better config when timings can't
-    # separate the candidates
-    t_min = min(timings.values())
-    best_blocks = max(
-        (blk for blk, t in timings.items() if t <= t_min * 1.05),
-        key=lambda blk: blk[0] * blk[1] * blk[2],
-    )
-    best_t = timings[best_blocks]
 
-    bb, bc, bw = best_blocks
-    result = dict(block_b=bb, block_c=bc, block_w=bw)
-    cache = _load_cache()   # re-read to narrow the concurrent-writer window
-    cache[key] = dict(blocks=result, us_per_call=best_t * 1e6)
-    _save_cache(cache)
-    return result
+def autotune_fused_train_blocks(
+    B: int,
+    C: int,
+    W: int,
+    L: int,
+    K: int,
+    *,
+    interpret: bool,
+    candidates=None,
+    reps: int = 3,
+    refresh: bool = False,
+) -> dict:
+    """Best ``{block_b, block_c, block_w}`` for a fused-TRAINING shape.
+
+    Cached under a distinct ``fused_train`` key — training tilings are
+    never answered by inference sweeps (the training kernel's VMEM budget
+    includes the (block_c, L) delta accumulator and the (block_b, L)
+    literal slab, so its optimum differs).  Synthetic data uses
+    class-aligned clause banks so the kernel's feedback-sparsity skip sees
+    a realistic feedback density.
+    """
+    clipped = _clipped(candidates or _TRAIN_CANDIDATES, B, C, W)
+    key = (f"fused_train:{_KEY_VERSION}:{_mode_backend(interpret)}:"
+           f"B{B}:C{C}:W{W}:L{L}:K{K}:cands[{_cands_tag(clipped)}]")
+
+    def make_runs():
+        from repro.core import packetizer
+
+        rng = np.random.default_rng(0)
+        bits = rng.integers(0, 2, (B, L), dtype=np.uint8)
+        lits = jnp.asarray(bits)
+        lit_words = jnp.asarray(packetizer.pack_bits_np(bits))
+        inc_bits = (rng.random((C, L)) < 0.05).astype(np.uint8)
+        inc_full = np.zeros((C, W * 32), np.uint8)
+        inc_full[:, :L] = inc_bits
+        inc_words = jnp.asarray(packetizer.pack_bits_np(inc_full))
+        ta = jnp.asarray(rng.integers(-64, 64, (C, L), dtype=np.int8))
+        y = jnp.asarray(rng.integers(0, K, B, dtype=np.int32))
+        kn = jnp.asarray((y + 1) % K, jnp.int32)
+        p_t = jnp.asarray(rng.random(B, dtype=np.float32))
+        p_n = jnp.asarray(rng.random(B, dtype=np.float32))
+        cpc = max(1, C // K)
+        cls = jnp.asarray(np.clip(np.arange(C) // cpc, 0, K - 1), jnp.int32)
+        pol = jnp.asarray(np.where(np.arange(C) % 2 == 0, 1, -1), jnp.int32)
+        seed = jnp.uint32(0)
+        return {
+            (bb, bc, bw): functools.partial(
+                fused_train.fused_tm_train_delta,
+                ta, lits, lit_words, inc_words, y, kn, p_t, p_n, cls, pol,
+                seed, p_act=1.0, p_inact=0.1,
+                block_b=bb, block_c=bc, block_w=bw, interpret=interpret,
+            )
+            for bb, bc, bw in clipped
+        }
+
+    return _memoized_best(key, make_runs, reps, refresh)

@@ -21,6 +21,7 @@ from repro import jax_compat
 from repro.kernels import class_sum as _class_sum_kernel
 from repro.kernels import clause_eval as _clause_eval_kernel
 from repro.kernels import fused_infer as _fused_infer_kernel
+from repro.kernels import fused_train as _fused_train_kernel
 from repro.kernels import ref
 from repro.kernels import ta_update as _ta_update_kernel
 from repro.kernels import xnor_popcount as _xnor_kernel
@@ -158,40 +159,57 @@ def tm_forward_packed(
 # Kernel-path TM training step (hash-RNG; matches ref.py bit-for-bit)
 # ---------------------------------------------------------------------------
 
-def feedback_plan(
-    fire: jax.Array,       # (B, C) uint8 training-mode clause outputs
-    y: jax.Array,          # (B,) int32 targets
-    votes: jax.Array,      # (C, K) int32
-    clause_class: jax.Array,   # (C,) int32 class id per clause
-    clause_pol: jax.Array,     # (C,) int32 +1/-1 (0 = padded)
+def feedback_probs(
+    sums: jax.Array,       # (B, K) int32 CLAMPED class sums
+    y: jax.Array,          # (B,) int32 targets (-1 = padded/invalid sample)
+    n_classes: int,
     threshold: int,
     seed: jax.Array,       # uint32 scalar
-    b_offset=0,            # global index of fire[0] (chunked training)
-    c_offset=0,            # global index of fire[:, 0] (clause-sharded step)
-    sums: jax.Array | None = None,  # precomputed clamped class sums (B, K)
+    b_offset=0,            # global index of sample 0 (chunked training)
 ):
-    """Compute per-(sample, clause) feedback types: 0 none, 1 Type I, 2 Type II.
+    """Per-sample feedback scalars: (kn, p_t, p_n).
 
-    Clause-level randomness uses the same hash RNG as the ta_update kernel so
-    the whole kernel-path training step is reproducible and oracle-testable.
+    ``kn`` is the hash-sampled negative class (uniform over the K-1 others);
+    ``p_t``/``p_n`` are the Type-I-side / Type-II-side clause selection
+    probabilities ``(T -/+ clamp(sum))/2T``.  These are the only O(B)
+    quantities the per-(sample, clause) feedback plan needs — the fused
+    training kernel consumes them directly.
     """
-    B, C = fire.shape
-    K = votes.shape[1]
+    B = y.shape[0]
     T = threshold
-    if sums is None:
-        sums = jnp.clip(fire.astype(jnp.int32) @ votes, -T, T)  # (B, K)
-
     b_idx = jnp.arange(B, dtype=jnp.uint32) + jnp.uint32(b_offset)
     # negative class: hash-sampled uniformly from the K-1 others
     r_neg = ref.hash_u32(b_idx, seed ^ jnp.uint32(0x9E3779B9))
-    kn = (r_neg % jnp.uint32(K - 1)).astype(jnp.int32)
+    kn = (r_neg % jnp.uint32(n_classes - 1)).astype(jnp.int32)
     kn = kn + (kn >= y)
 
     sum_t = jnp.take_along_axis(sums, y[:, None], axis=1)[:, 0]
     sum_n = jnp.take_along_axis(sums, kn[:, None], axis=1)[:, 0]
     p_t = (T - sum_t).astype(jnp.float32) / (2.0 * T)
     p_n = (T + sum_n).astype(jnp.float32) / (2.0 * T)
+    return kn, p_t, p_n
 
+
+def feedback_select(
+    y: jax.Array,          # (B,) int32 targets
+    kn: jax.Array,         # (B,) int32 sampled negative classes
+    p_t: jax.Array,        # (B,) float32
+    p_n: jax.Array,        # (B,) float32
+    clause_class: jax.Array,   # (C,) int32 class id per clause
+    clause_pol: jax.Array,     # (C,) int32 +1/-1 (0 = padded)
+    seed: jax.Array,       # uint32 scalar
+    b_offset=0,            # global index of sample 0
+    c_offset=0,            # global index of clause 0 (clause-sharded step)
+) -> jax.Array:
+    """(B, C) uint8 feedback types: 0 none, 1 Type I, 2 Type II.
+
+    This is the oracle the fused training kernel reproduces bit-for-bit;
+    randomness is the same counter hash as the ta_update kernel, indexed by
+    GLOBAL (sample, clause) id so sharded/chunked callers match unsharded.
+    """
+    B = y.shape[0]
+    C = clause_class.shape[0]
+    b_idx = jnp.arange(B, dtype=jnp.uint32) + jnp.uint32(b_offset)
     c_idx = (jnp.arange(C, dtype=jnp.uint32) + jnp.uint32(c_offset))[None, :]
     # hash indexed by global (b, c) via an offset-consistent mixing
     # (identical for sharded and unsharded callers)
@@ -211,7 +229,36 @@ def feedback_plan(
         is_t & pos, 1, jnp.where(is_t & neg, 2,
         jnp.where(is_n & pos, 2, jnp.where(is_n & neg, 1, 0))),
     )
-    return jnp.where(sel, ftype, 0).astype(jnp.uint8), sums
+    return jnp.where(sel, ftype, 0).astype(jnp.uint8)
+
+
+def feedback_plan(
+    fire: jax.Array,       # (B, C) uint8 training-mode clause outputs
+    y: jax.Array,          # (B,) int32 targets
+    votes: jax.Array,      # (C, K) int32
+    clause_class: jax.Array,   # (C,) int32 class id per clause
+    clause_pol: jax.Array,     # (C,) int32 +1/-1 (0 = padded)
+    threshold: int,
+    seed: jax.Array,       # uint32 scalar
+    b_offset=0,            # global index of fire[0] (chunked training)
+    c_offset=0,            # global index of fire[:, 0] (clause-sharded step)
+    sums: jax.Array | None = None,  # precomputed clamped class sums (B, K)
+):
+    """Compute per-(sample, clause) feedback types: 0 none, 1 Type I, 2 Type II.
+
+    Clause-level randomness uses the same hash RNG as the ta_update kernel so
+    the whole kernel-path training step is reproducible and oracle-testable.
+    """
+    K = votes.shape[1]
+    T = threshold
+    if sums is None:
+        sums = jnp.clip(fire.astype(jnp.int32) @ votes, -T, T)  # (B, K)
+    kn, p_t, p_n = feedback_probs(sums, y, K, T, seed, b_offset=b_offset)
+    ftype = feedback_select(
+        y, kn, p_t, p_n, clause_class, clause_pol, seed,
+        b_offset=b_offset, c_offset=c_offset,
+    )
+    return ftype, sums
 
 
 def tm_train_step_kernel(
@@ -221,46 +268,117 @@ def tm_train_step_kernel(
     y: jax.Array,            # (B,)
     seed: jax.Array,         # uint32 scalar
     batch_chunk: int | None = None,
+    *,
+    fuse: bool = True,
+    autotune: bool = False,
+    blocks: dict | None = None,
     **kw,
 ):
     """Full kernel-path batch training step (clause_fire -> plan -> ta_delta).
 
+    On the kernel path (``use_kernel=True`` / ``REPRO_USE_PALLAS=1``),
+    ``fuse=True`` (the default) runs the whole step as TWO kernel launches:
+    a fused-inference pass for the class sums the feedback plan needs, then
+    the fused training kernel (``fused_train.py``) — clause fire, feedback
+    type, and TA delta in one ``pallas_call``, with the ``(B, C)`` fire and
+    ftype matrices never touching HBM.  ``fuse=False`` keeps the legacy
+    three-dispatch pipeline; off the kernel path the ``ref.py`` oracles run.
+    All engines are bit-identical.
+
     ``batch_chunk`` scans the batch in slices, accumulating the int32 delta —
     bit-identical to unchunked (the hash RNG is indexed by global sample id)
-    but with O(chunk) working set instead of O(batch).  This is the §Perf
-    memory-term fix for the pod-scale TM training cell.
+    but with O(chunk) working set instead of O(batch).  A ragged tail
+    (``B % batch_chunk != 0``) is zero-padded to a full chunk and masked out
+    of the feedback plan, so every batch size chunks bit-identically.
+
+    ``autotune=True`` picks the fused kernels' block tilings from
+    ``kernels/autotune.py``'s cached sweep (training shapes cache under
+    their own key); ``blocks`` pins the fused training kernel tiling
+    explicitly.
     """
     from repro.core import packetizer, tm
 
+    use_kernel, interpret = _resolve(kw.get("use_kernel"), kw.get("interpret"))
+    fused = bool(fuse and use_kernel)
     inc_words = packetizer.pack_include_masks(ta_state)
     votes = tm.vote_matrix(config)
     c = jnp.arange(config.n_clauses_total)
     clause_class = jnp.clip(c // config.clauses_per_class, 0, config.n_classes - 1)
     pol = tm.polarity(config)
     p_act = 1.0 if config.boost_true_positive else (config.s - 1.0) / config.s
+    T = config.threshold
+    B = x.shape[0]
 
-    def chunk_delta(xc, yc, b_offset):
+    infer_blocks = {}
+    if fused and autotune:
+        from repro.kernels import autotune as _autotune
+
+        chunk_b = batch_chunk if (batch_chunk and B > batch_chunk) else B
+        C_tot, L = ta_state.shape
+        W = packetizer.n_words(config.n_literals)
+        if blocks is None:
+            blocks = _autotune.autotune_fused_train_blocks(
+                chunk_b, C_tot, W, L, config.n_classes, interpret=interpret
+            )
+        infer_blocks = _autotune.autotune_fused_blocks(
+            chunk_b, C_tot, W, config.n_classes, interpret=interpret
+        )
+
+    def chunk_delta(xc, yc, b_offset, valid):
         lits = tm.literals(xc)
         lit_words = packetizer.pack_bits(lits)
+        if fused:
+            # launch 1: class sums via the fused-inference accumulator
+            # (training semantics: no nonempty mask) — bit-identical ints
+            # to fire @ votes.
+            sums = _fused_infer_kernel.fused_tm_forward(
+                lit_words, inc_words, votes, None,
+                interpret=interpret, **infer_blocks,
+            )
+            kn, p_t, p_n = feedback_probs(
+                jnp.clip(sums, -T, T), yc, config.n_classes, T, seed,
+                b_offset=b_offset,
+            )
+            if valid is not None:     # padded tail samples select nothing
+                p_t = jnp.where(valid, p_t, 0.0)
+                p_n = jnp.where(valid, p_n, 0.0)
+            # launch 2: fire -> ftype -> delta, all in VMEM
+            return _fused_train_kernel.fused_tm_train_delta(
+                ta_state, lits, lit_words, inc_words, yc, kn, p_t, p_n,
+                clause_class, pol, seed,
+                p_act=p_act, p_inact=1.0 / config.s, b_offset=b_offset,
+                interpret=interpret, **(blocks or {}),
+            )
         fire = clause_fire(lit_words, inc_words, **kw).astype(jnp.uint8)
         ftype, _ = feedback_plan(
-            fire, yc, votes, clause_class, pol, config.threshold, seed,
-            b_offset=b_offset,
+            fire, yc, votes, clause_class, pol, T, seed, b_offset=b_offset,
         )
+        if valid is not None:
+            ftype = jnp.where(valid[:, None], ftype, jnp.uint8(0))
         return ta_delta(
             ta_state, lits, fire, ftype, seed,
             p_act=p_act, p_inact=1.0 / config.s, b_offset=b_offset, **kw,
         )
 
-    B = x.shape[0]
-    if batch_chunk and B > batch_chunk and B % batch_chunk == 0:
-        n = B // batch_chunk
-        xs = x.reshape(n, batch_chunk, *x.shape[1:])
-        ys = y.reshape(n, batch_chunk)
+    if batch_chunk and B > batch_chunk:
+        n = -(-B // batch_chunk)
+        Bp = n * batch_chunk
+        xs, ys = x, y
+        if Bp != B:   # ragged tail: zero-pad samples, mask their feedback
+            xs = jnp.pad(x, ((0, Bp - B), (0, 0)))
+            ys = jnp.pad(y, (0, Bp - B), constant_values=-1)
+        xs = xs.reshape(n, batch_chunk, *x.shape[1:])
+        ys = ys.reshape(n, batch_chunk)
+        need_mask = Bp != B
 
         def body(acc, inp):
             i, xc, yc = inp
-            return acc + chunk_delta(xc, yc, i * batch_chunk), None
+            b_off = i * jnp.uint32(batch_chunk)
+            valid = (
+                (jnp.arange(batch_chunk, dtype=jnp.uint32) + b_off)
+                < jnp.uint32(B)
+            ) if need_mask else None
+            return acc + chunk_delta(xc, yc, b_off, valid), None
 
         delta, _ = jax.lax.scan(
             body,
@@ -268,7 +386,7 @@ def tm_train_step_kernel(
             (jnp.arange(n, dtype=jnp.uint32), xs, ys),
         )
     else:
-        delta = chunk_delta(x, y, 0)
+        delta = chunk_delta(x, y, 0, None)
     new_ta = jnp.clip(
         ta_state.astype(jnp.int32) + delta, -config.n_states, config.n_states - 1
     ).astype(jnp.int8)

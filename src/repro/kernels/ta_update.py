@@ -26,21 +26,22 @@ from repro.kernels import ref as kref
 
 
 def _ta_delta_kernel(
-    seed_ref, ta_ref, lit_ref, fire_ref, ft_ref, out_ref,
+    scal_ref, ta_ref, lit_ref, fire_ref, ft_ref, out_ref,
     *, n_batch: int, c_dim: int, l_dim: int, block_c: int, block_l: int,
-    t_act, t_inact, b_offset: int = 0,
+    t_act, t_inact,
 ):
     c0 = pl.program_id(0) * block_c
     l0 = pl.program_id(1) * block_l
 
     c_idx = c0 + jax.lax.broadcasted_iota(jnp.uint32, (block_c, block_l), 0)
     l_idx = l0 + jax.lax.broadcasted_iota(jnp.uint32, (block_c, block_l), 1)
-    seed = seed_ref[0, 0]
+    seed = scal_ref[0, 0]
+    b_off = scal_ref[0, 1]   # runtime scalar: chunk loops pass traced offsets
 
     excl = ta_ref[...] < 0                                    # (bc, bl)
 
     def body(b, acc):
-        bu = jnp.uint32(b) + jnp.uint32(b_offset)
+        bu = jnp.uint32(b) + b_off
         gidx = (bu * jnp.uint32(c_dim) + c_idx) * jnp.uint32(l_dim) + l_idx
         r = kref.hash_u32(gidx, seed)
         act = (r < t_act).astype(jnp.int32)
@@ -64,7 +65,7 @@ def _ta_delta_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p_act", "p_inact", "b_offset", "block_c", "block_l", "interpret"),
+    static_argnames=("p_act", "p_inact", "block_c", "block_l", "interpret"),
 )
 def ta_delta(
     ta: jax.Array,       # (C, L) int8
@@ -91,19 +92,22 @@ def ta_delta(
     lit_p = jnp.pad(lits, ((0, 0), (0, Lp - L)))
     fire_p = jnp.pad(fire, ((0, 0), (0, Cp - C)))
     ft_p = jnp.pad(ftype, ((0, 0), (0, Cp - C)))
-    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    scal = jnp.stack([
+        jnp.asarray(seed).astype(jnp.uint32),
+        jnp.asarray(b_offset).astype(jnp.uint32),
+    ]).reshape(1, 2)
 
     grid = (Cp // block_c, Lp // block_l)
     out = pl.pallas_call(
         functools.partial(
             _ta_delta_kernel,
             n_batch=B, c_dim=C, l_dim=L,
-            block_c=block_c, block_l=block_l, b_offset=b_offset,
+            block_c=block_c, block_l=block_l,
             t_act=kref.prob_to_u32(p_act), t_inact=kref.prob_to_u32(p_inact),
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda c, l: (0, 0)),            # seed
+            pl.BlockSpec((1, 2), lambda c, l: (0, 0)),            # seed/b_off
             pl.BlockSpec((block_c, block_l), lambda c, l: (c, l)),  # ta
             pl.BlockSpec((B, block_l), lambda c, l: (0, l)),        # lits
             pl.BlockSpec((B, block_c), lambda c, l: (0, c)),        # fire
@@ -113,7 +117,7 @@ def ta_delta(
         out_shape=jax.ShapeDtypeStruct((Cp, Lp), jnp.int32),
         compiler_params=pallas_compat.CompilerParams(dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(seed_arr, ta_p, lit_p, fire_p, ft_p)
+    )(scal, ta_p, lit_p, fire_p, ft_p)
     return out[:C, :L]
 
 

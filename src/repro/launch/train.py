@@ -58,11 +58,22 @@ def train_tm(args) -> None:
     mon = StragglerMonitor()
     ta = state.ta_state
     it = iter(loader)
+    # the fused training pipeline (fuse=True) is the kernel-path default:
+    # two pallas launches per step, no (B, C) fire/ftype HBM round-trips.
+    # --autotune resolves (and caches) the fused block tilings on first use.
+    step_kw = dict(
+        batch_chunk=args.batch_chunk,
+        fuse=not args.no_fuse,
+        autotune=args.autotune,
+    )
+    if args.use_kernel:
+        step_kw["use_kernel"] = True
     for step in range(start_step, args.steps):
         mon.start_step()
         xb, yb = next(it)
         ta, _ = ops.tm_train_step_kernel(
-            config, ta, jnp.asarray(xb), jnp.asarray(yb), jnp.uint32(step)
+            config, ta, jnp.asarray(xb), jnp.asarray(yb), jnp.uint32(step),
+            **step_kw,
         )
         flag = mon.end_step(step)
         if flag:
@@ -150,6 +161,19 @@ def main() -> None:
     ap.add_argument("--n-train", type=int, default=4000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch-chunk", type=int, default=None,
+                    help="TM: scan the batch in slices of this size "
+                         "(O(chunk) working set; ragged tails are padded "
+                         "and masked, results stay bit-identical)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="TM: use the legacy three-dispatch training step "
+                         "instead of the fused Pallas pipeline")
+    ap.add_argument("--autotune", action="store_true",
+                    help="TM: pick fused-kernel block tilings from the "
+                         "cached autotuner sweep")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="TM: force the Pallas kernel path (same as "
+                         "REPRO_USE_PALLAS=1)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=20)
