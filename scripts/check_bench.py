@@ -1,0 +1,117 @@
+"""Bench regression gate: fresh bench_smoke output vs committed baselines.
+
+    python scripts/check_bench.py \
+        --pair BENCH_fused_infer.json:fresh_infer.json \
+        --pair BENCH_fused_train.json:fresh_train.json \
+        [--factor 2.0]
+
+For each baseline:fresh pair, compares the LEAD fused row (the first
+``*_fused_*`` row — bench modules emit the lead shape first) and exits
+non-zero when the fresh time exceeds ``factor`` x the committed baseline.
+The committed ``BENCH_fused_*.json`` files are the cross-PR perf
+trajectory; this gate turns them from "diffable artifact" into an enforced
+floor — a PR that makes the fused kernels >2x slower in interpret mode
+fails CI instead of silently regressing the trajectory.
+
+Comparisons are only meaningful between like runs: when backend or
+interpret-mode metadata differs between baseline and fresh (e.g. a TPU
+runner checking against a CPU-interpret baseline), the pair is reported as
+``skipped`` and does not fail the gate.  Missing/unparseable fresh files DO
+fail — a bench that crashed must not pass.
+
+Known limitation: same-backend hardware skew (a CI runner class slower
+than the machine that recorded the baseline) is indistinguishable from a
+code regression here.  The default factor is deliberately generous (2x
+catches "the fused path stopped being fused"-sized regressions, not noise)
+and CI pins the runner class; if the runner class changes, refresh the
+committed baselines in the same PR or raise ``--factor``.
+
+No third-party deps (stdlib only) so the gate runs before pip installs
+anything beyond the test stack.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lead_fused_row(report: dict) -> dict | None:
+    """First fused (or sharded-mesh) row — bench modules emit the lead
+    shape first, so this is the shape the gate tracks."""
+    for row in report.get("rows", []):
+        name = row.get("name", "")
+        if "_fused_" in name or "_mesh_" in name:
+            return row
+    return None
+
+
+def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
+    """Returns 'ok' | 'skipped: ...' | raises RegressionError."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        return f"skipped: no baseline ({e})"
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        raise RegressionError(f"fresh report {fresh_path!r} unreadable: {e}")
+
+    for key in ("backend", "interpret_mode"):
+        if base.get(key) != fresh.get(key):
+            return (f"skipped: {key} mismatch "
+                    f"(baseline {base.get(key)!r} vs fresh {fresh.get(key)!r})")
+
+    b_row = lead_fused_row(base)
+    f_row = lead_fused_row(fresh)
+    if b_row is None:
+        return "skipped: baseline has no fused row"
+    if f_row is None:
+        raise RegressionError(
+            f"{fresh_path}: no fused row — the fused bench did not run")
+    b_us, f_us = float(b_row["us_per_call"]), float(f_row["us_per_call"])
+    ratio = f_us / b_us if b_us > 0 else float("inf")
+    verdict = (f"lead {b_row['name']}: baseline {b_us:.0f}us, "
+               f"fresh {f_us:.0f}us ({ratio:.2f}x)")
+    if f_us > factor * b_us:
+        raise RegressionError(
+            f"{verdict} — exceeds the {factor:.1f}x regression gate")
+    return f"ok: {verdict}"
+
+
+class RegressionError(Exception):
+    pass
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pair", action="append", required=True,
+                    metavar="BASELINE:FRESH",
+                    help="baseline json : fresh json (repeatable)")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when fresh > factor x baseline (default 2.0; "
+                         "generous because CI containers are noisy)")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for pair in args.pair:
+        baseline_path, _, fresh_path = pair.partition(":")
+        if not fresh_path:
+            print(f"FAIL {pair}: expected BASELINE:FRESH")
+            failures += 1
+            continue
+        try:
+            msg = check_pair(baseline_path, fresh_path, args.factor)
+            print(f"{'SKIP' if msg.startswith('skipped') else 'PASS'} "
+                  f"{baseline_path}: {msg}")
+        except RegressionError as e:
+            print(f"FAIL {baseline_path}: {e}")
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,8 +11,24 @@ Layout:
     ``psum`` over ``data`` only — int32 bounded-magnitude "compressed
     gradients".
 
-Implemented with jit + NamedSharding constraints (GSPMD inserts exactly the
-collectives above; verified in tests/test_sharding.py and the dry-run).
+Two execution engines share this one dispatch layer (PR 3):
+
+  * ``engine="gspmd"`` — jit + NamedSharding constraints; GSPMD inserts the
+    collectives above.  The original path; kernel-free, XLA everywhere.
+  * ``engine="kernel"`` — an explicit ``shard_map`` schedule whose per-shard
+    body IS the fused Pallas pipeline (``ops.tm_train_step_kernel`` /
+    ``ops.tm_forward_packed``): each ``model`` shard runs the fused kernels
+    on its local clause bank with runtime ``b_offset``/``c_offset`` global
+    RNG ids, one int32 class-sum ``psum`` over ``model`` completes the
+    partial adder-bank outputs, and training deltas ``psum`` over ``data``.
+    Bit-identical to the single-device ``ref.py`` oracle (the hash RNG is
+    indexed by global (sample, clause, literal) ids on every shard) —
+    verified in tests/test_sharded_fused.py on an emulated mesh.
+
+The clause axis is the natural partition unit (the eFPGA runtime-tunable TM
+work partitions by clause bank for exactly this reason): clause banks larger
+than one core's VMEM split across ``model`` with only the tiny (B, K) psum
+on the wire.
 """
 
 from __future__ import annotations
@@ -23,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import jax_compat
 from repro.core import tm
 
 
@@ -41,25 +58,76 @@ def tm_shardings(config: tm.TMConfig, mesh: Mesh):
     return state, batch
 
 
-def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh):
+def sharded_forward_fn(mesh: Mesh, *, use_kernel: bool | None = None,
+                       interpret: bool | None = None, fuse: bool = True,
+                       blocks: dict | None = None):
+    """Clause-sharded fused forward: (inc_words, votes, nonempty,
+    lit_words) -> (B, K) int32 GLOBAL class sums.
+
+    An explicit ``shard_map`` schedule: each ``model`` shard evaluates its
+    local clause bank with the fused single-pass inference kernel (or the
+    oracle, per dispatch) — the full bank never needs to fit one core's
+    VMEM — and one int32 ``psum`` over ``model`` completes the adder bank.
+    Exact: integer partial sums compose bit-identically to the unsharded
+    kernel.  Shape-agnostic (works for dense banks and compiled artifacts);
+    the clause axis size must be divisible by the ``model`` axis size.
+    """
+    from repro.kernels import ops
+
+    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    d = data_axes(mesh)
+
+    def body(inc_loc, votes_loc, ne_loc, lw_loc):
+        sums = ops.tm_forward_packed(
+            lw_loc, inc_loc, votes_loc, ne_loc,
+            use_kernel=uk, interpret=it, fuse=fuse, **(blocks or {}),
+        )
+        return jax.lax.psum(sums, "model")
+
+    fwd = jax_compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", None), P("model", None), P("model"), P(d, None)),
+        out_specs=P(d, None),
+        check_vma=False,
+    )
+    return jax.jit(fwd)
+
+
+def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh, *,
+                       use_kernel: bool | None = None,
+                       interpret: bool | None = None, fuse: bool = True,
+                       blocks: dict | None = None):
     """Build a jit'd sharded inference fn: packed literals -> class ids.
 
-    Clause axis sharded over ``model``; GSPMD turns the vote matmul into a
-    local matmul + all-reduce over ``model`` of the (B, K) partial sums.
+    Clause axis sharded over ``model``.  On the kernel path (``use_kernel``
+    / ``REPRO_USE_PALLAS``) the per-shard body is the fused single-pass
+    Pallas kernel inside an explicit ``shard_map`` (clause banks bigger
+    than one core's VMEM split across the mesh; one (B, K) class-sum psum
+    on the wire).  Otherwise GSPMD turns the vote matmul into a local
+    matmul + all-reduce over ``model`` of the (B, K) partial sums.
     """
+    from repro.kernels import ops
+
+    uk, it = ops.kernel_dispatch(use_kernel, interpret)
     d = data_axes(mesh)
     votes_s = NamedSharding(mesh, P("model", None))
     inc_s = NamedSharding(mesh, P("model", None))
     x_s = NamedSharding(mesh, P(d, None))
     out_s = NamedSharding(mesh, P(d))
 
-    def predict(inc_words, votes, nonempty, lit_words):
-        from repro.kernels import ops
+    if uk:
+        fwd = sharded_forward_fn(mesh, use_kernel=uk, interpret=it,
+                                 fuse=fuse, blocks=blocks)
 
-        fired = ops.clause_fire(lit_words, inc_words, use_kernel=False)
-        fired = fired * nonempty[None, :].astype(fired.dtype)
-        sums = fired.astype(jnp.int32) @ votes
-        return jnp.argmax(sums, axis=-1)
+        def predict(inc_words, votes, nonempty, lit_words):
+            return jnp.argmax(fwd(inc_words, votes, nonempty, lit_words),
+                              axis=-1)
+    else:
+        def predict(inc_words, votes, nonempty, lit_words):
+            fired = ops.clause_fire(lit_words, inc_words, use_kernel=False)
+            fired = fired * nonempty[None, :].astype(fired.dtype)
+            sums = fired.astype(jnp.int32) @ votes
+            return jnp.argmax(sums, axis=-1)
 
     return jax.jit(
         predict,
@@ -70,7 +138,13 @@ def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh):
 
 def sharded_train_step_fn(config: tm.TMConfig, mesh: Mesh,
                           batch_chunk: int | None = 2048,
-                          algorithm: str = "bitwise"):
+                          algorithm: str = "bitwise",
+                          *,
+                          engine: str = "gspmd",
+                          use_kernel: bool | None = None,
+                          interpret: bool | None = None,
+                          fuse: bool = True,
+                          blocks: dict | None = None):
     """Build a jit'd sharded batch training step.
 
     The kernel-path step (hash RNG) is used because its feedback plan is a
@@ -78,7 +152,36 @@ def sharded_train_step_fn(config: tm.TMConfig, mesh: Mesh,
     replicated over ``data`` and sharded over ``model`` on the clause axis;
     the per-data-shard deltas are combined by GSPMD's all-reduce when the
     (replicated-output) update is applied.
+
+    ``engine`` selects the execution engine of the clause shards:
+
+      * ``"gspmd"`` (default) — jit + NamedSharding; XLA partitions the
+        oracle step.  Semantically the whole-bank function; sharding is
+        pure layout.
+      * ``"kernel"`` — explicit ``shard_map`` schedule running
+        ``ops.tm_train_step_kernel`` per shard (the fused two-launch Pallas
+        pipeline when the kernel path is active; ``fuse``/``use_kernel``/
+        ``interpret``/``blocks`` pass through).  Collectives: one int32
+        (B, K) class-sum ``psum`` over ``model`` + one int32 (C_loc, L)
+        delta ``psum`` over ``data``.  Bit-identical to the single-device
+        oracle — every hash is indexed by global (sample, clause) ids via
+        runtime ``b_offset``/``c_offset`` scalars.  Requires the clause
+        axis divisible by the ``model`` axis size (``clause_pad_multiple``)
+        and the batch by the data axes.
+
+    ``algorithm="matmul"`` selects the beyond-paper binomial-aggregation
+    step (its own shard_map schedule; statistically, not bitwise, exact).
     """
+    if engine not in ("gspmd", "kernel"):
+        # all engines are bit-identical, so a silent fallthrough on a typo
+        # would "work" while measuring the wrong schedule — fail loudly
+        raise ValueError(f"unknown engine {engine!r}: expected 'gspmd' or "
+                         "'kernel'")
+    if engine == "kernel" and config.n_clauses_total % mesh.shape["model"]:
+        raise ValueError(
+            f"clause axis ({config.n_clauses_total}) not divisible by the "
+            f"model axis ({mesh.shape['model']}); align via "
+            "clause_pad_multiple")
     d = data_axes(mesh)
     # matmul path: automata sharded over BOTH axes (clauses x literals): the
     # step all-gathers the int8 states over `data` (34 MB at pod scale) and
@@ -97,7 +200,6 @@ def sharded_train_step_fn(config: tm.TMConfig, mesh: Mesh,
             # delta all-reduce here; the hand schedule is AG(int8) + two tiny
             # psums + psum_scatter (see EXPERIMENTS.md §Perf, TM cell)
             data_ax = d[-1] if d else "data"
-            from repro import jax_compat
 
             return jax_compat.shard_map(
                 lambda ta, xx, yy: ops.tm_train_step_matmul_local(
@@ -108,6 +210,43 @@ def sharded_train_step_fn(config: tm.TMConfig, mesh: Mesh,
                 out_specs=P("model", data_ax),
                 check_vma=False,
             )(ta_state, x, y)
+
+        if engine == "kernel":
+            # explicit clause-sharded shard_map schedule around the fused
+            # kernel pipeline: each model shard owns (C_loc, L) automata and
+            # evaluates/updates them locally; one class-sum psum over
+            # `model`, one delta psum over the data axes.
+            def body(ta_loc, xx, yy):
+                C_loc, B_loc = ta_loc.shape[0], xx.shape[0]
+                c_off = (jax.lax.axis_index("model").astype(jnp.uint32)
+                         * jnp.uint32(C_loc))
+                b_off = jnp.uint32(0)
+                for ax in d:   # row-major global id of this data shard
+                    b_off = (b_off * jnp.uint32(jax_compat.axis_size(ax))
+                             + jax.lax.axis_index(ax).astype(jnp.uint32))
+                b_off = b_off * jnp.uint32(B_loc)
+                _, delta = ops.tm_train_step_kernel(
+                    config, ta_loc, xx, yy, seed,
+                    batch_chunk=batch_chunk, fuse=fuse, blocks=blocks,
+                    b_offset=b_off, c_offset=c_off,
+                    c_total=config.n_clauses_total,
+                    sums_reduce=lambda s: jax.lax.psum(s, "model"),
+                    use_kernel=use_kernel, interpret=interpret,
+                )
+                if d:   # combine the per-data-shard int32 partial deltas
+                    delta = jax.lax.psum(delta, d)
+                return jnp.clip(
+                    ta_loc.astype(jnp.int32) + delta,
+                    -config.n_states, config.n_states - 1,
+                ).astype(jnp.int8)
+
+            return jax_compat.shard_map(
+                body, mesh=mesh,
+                in_specs=(P("model", None), P(d, None), P(d)),
+                out_specs=P("model", None),
+                check_vma=False,
+            )(ta_state, x, y)
+
         new_ta, _ = ops.tm_train_step_kernel(
             config, ta_state, x, y, seed, use_kernel=False,
             batch_chunk=batch_chunk,

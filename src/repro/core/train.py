@@ -84,6 +84,7 @@ def fit(
     log_every: int = 0,
     engine: str = "jnp",
     batch_chunk: int | None = None,
+    mesh=None,
 ) -> tm.TMState:
     """Simple host loop used by examples/tests (the GUI "Train" button).
 
@@ -97,7 +98,24 @@ def fit(
     sequential semantics, batch-accumulated); ``engine="kernel"`` runs the
     hash-RNG kernel-path step (fused Pallas pipeline on the kernel path),
     seeded by the global step index so runs are reproducible.
+
+    ``mesh`` (with ``engine="kernel"``) runs every step through the
+    clause-sharded ``shard_map`` schedule of
+    ``core/sharding.py:sharded_train_step_fn(engine="kernel")`` — automata
+    sharded over ``model``, batch over the data axes.  The shuffle stream
+    and per-step seeds are unchanged, and the sharded step is bit-identical
+    to the single-device one, so ``fit`` results do not depend on the mesh.
     """
+    sharded_step = None
+    if mesh is not None:
+        if engine != "kernel":
+            raise ValueError("fit(mesh=...) requires engine='kernel' "
+                             "(the hash-RNG step; no cross-shard RNG state)")
+        from repro.core import sharding as tm_sharding
+
+        sharded_step = tm_sharding.sharded_train_step_fn(
+            config, mesh, batch_chunk=batch_chunk, engine="kernel"
+        )
     n = x.shape[0]
     steps_per_epoch = max(1, n // batch_size)
     gstep = 0
@@ -109,7 +127,11 @@ def fit(
             xb = xs[i * batch_size : (i + 1) * batch_size]
             yb = ys[i * batch_size : (i + 1) * batch_size]
             rng, rs = jax.random.split(rng)
-            if engine == "kernel":
+            if sharded_step is not None:
+                new_ta = sharded_step(state.ta_state, xb, yb,
+                                      jnp.uint32(gstep))
+                state = tm.TMState(ta_state=new_ta, steps=state.steps + 1)
+            elif engine == "kernel":
                 state, _ = train_step_kernel(
                     config, state, xb, yb, jnp.uint32(gstep), batch_chunk
                 )

@@ -81,6 +81,7 @@ def _fused_train_kernel(
     l_dim: int,
     t_act,
     t_inact,
+    global_clause: bool,
 ):
     b = pl.program_id(1)
     w = pl.program_id(2)
@@ -147,9 +148,14 @@ def _fused_train_kernel(
 
         # ---- TA delta fold: bit-identical to ref.ta_delta_ref.  The
         # per-automaton hash is indexed by LOCAL (c, l) — matching the
-        # unfused composition, where ta_delta runs on the local shard.
+        # unfused composition, where ta_delta runs on the local shard —
+        # unless ``global_clause`` (the clause-sharded trainer), which
+        # indexes by GLOBAL clause id so every shard reproduces exactly the
+        # full bank's draws for its rows.
         shape = out_ref.shape                              # (block_c, Lp)
         c_idx = c0 + jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+        if global_clause:
+            c_idx = c_idx + c_off
         l_idx = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
         excl = ta_ref[...] < 0
         lits_all = lits_ref[...]
@@ -184,7 +190,7 @@ def _fused_train_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("p_act", "p_inact", "block_b", "block_c", "block_w",
-                     "interpret"),
+                     "interpret", "c_total"),
 )
 def fused_tm_train_delta(
     ta: jax.Array,            # (C, L) int8 automata states
@@ -203,6 +209,7 @@ def fused_tm_train_delta(
     p_inact: float,
     b_offset=0,               # global index of sample 0 (runtime scalar ok)
     c_offset=0,               # global index of clause 0 (runtime scalar ok)
+    c_total: int | None = None,  # global clause count (clause-sharded caller)
     block_b: int = 128,
     block_c: int = 256,
     block_w: int = 64,
@@ -222,7 +229,11 @@ def fused_tm_train_delta(
     ``lax.scan`` chunk loop or a shard_map body are fine): the selection
     hash is indexed by global (sample, clause) id and the automaton hash by
     (global sample, local clause, local literal), so chunked, sharded, and
-    unsharded callers produce identical bits.
+    unsharded callers produce identical bits.  ``c_total`` (static)
+    switches the automaton hash too onto GLOBAL clause ids in a bank of
+    ``c_total`` clauses — with it, a clause shard's delta equals the
+    corresponding rows of the FULL-bank delta (the clause-sharded
+    ``shard_map`` trainer's invariant), not just the per-shard composition.
     """
     C, L = ta.shape
     B, W = lit_words.shape
@@ -267,9 +278,10 @@ def fused_tm_train_delta(
         functools.partial(
             _fused_train_kernel,
             block_b=block_b, block_c=block_c, block_w=block_w,
-            c_dim=C, l_dim=L,
+            c_dim=C if c_total is None else c_total, l_dim=L,
             t_act=kref.prob_to_u32(p_act),
             t_inact=kref.prob_to_u32(p_inact),
+            global_clause=c_total is not None,
         ),
         grid=grid,
         in_specs=[

@@ -77,6 +77,7 @@ def class_sums(
 
 def ta_delta(
     ta, lits, fire, ftype, seed, *, p_act, p_inact, b_offset=0,
+    c_offset=0, c_total=None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
     **blocks,
@@ -86,10 +87,12 @@ def ta_delta(
         return _ta_update_kernel.ta_delta(
             ta, lits, fire, ftype, seed,
             p_act=p_act, p_inact=p_inact, b_offset=b_offset,
+            c_offset=c_offset, c_total=c_total,
             interpret=interpret, **blocks,
         )
     return ref.ta_delta_ref(ta, lits, fire, ftype, seed, p_act=p_act,
-                            p_inact=p_inact, b_offset=b_offset)
+                            p_inact=p_inact, b_offset=b_offset,
+                            c_offset=c_offset, c_total=c_total)
 
 
 def xnor_dot(
@@ -263,7 +266,7 @@ def feedback_plan(
 
 def tm_train_step_kernel(
     config,
-    ta_state: jax.Array,     # (C, L) int8
+    ta_state: jax.Array,     # (C, L) int8 — the full bank OR a clause shard
     x: jax.Array,            # (B, F) {0,1}
     y: jax.Array,            # (B,)
     seed: jax.Array,         # uint32 scalar
@@ -272,6 +275,10 @@ def tm_train_step_kernel(
     fuse: bool = True,
     autotune: bool = False,
     blocks: dict | None = None,
+    b_offset=0,              # global index of sample 0 (data-sharded caller)
+    c_offset=0,              # global index of clause 0 (clause-sharded caller)
+    c_total: int | None = None,  # set when ta_state is a clause shard
+    sums_reduce=None,        # e.g. lambda s: lax.psum(s, "model")
     **kw,
 ):
     """Full kernel-path batch training step (clause_fire -> plan -> ta_delta).
@@ -295,19 +302,39 @@ def tm_train_step_kernel(
     ``kernels/autotune.py``'s cached sweep (training shapes cache under
     their own key); ``blocks`` pins the fused training kernel tiling
     explicitly.
+
+    **Clause-sharded mode** (the ``shard_map`` body of
+    ``core/sharding.py:sharded_train_step_fn(engine="kernel")``): pass
+    ``ta_state`` as the local ``(C_loc, L)`` shard, ``c_offset`` as its
+    global clause offset (a traced ``axis_index``-derived scalar is fine),
+    ``c_total=config.n_clauses_total``, and ``sums_reduce`` as the
+    class-sum ``psum`` over the clause-shard axis.  ``b_offset`` is the
+    global id of ``x[0]`` for data-sharded batches.  Every hash draw is
+    then indexed by GLOBAL (sample, clause, literal) ids, so the returned
+    shard delta equals the corresponding rows of the unsharded full-bank
+    delta bit-for-bit.  NOTE: the returned ``new_ta`` applies only the
+    LOCAL batch's delta — a data-sharded caller must ``psum`` the returned
+    delta over its data axes and apply it to the shard itself.
     """
     from repro.core import packetizer, tm
 
     use_kernel, interpret = _resolve(kw.get("use_kernel"), kw.get("interpret"))
     fused = bool(fuse and use_kernel)
     inc_words = packetizer.pack_include_masks(ta_state)
+    C_loc = ta_state.shape[0]
     votes = tm.vote_matrix(config)
     c = jnp.arange(config.n_clauses_total)
     clause_class = jnp.clip(c // config.clauses_per_class, 0, config.n_classes - 1)
     pol = tm.polarity(config)
+    if c_total is not None:   # clause shard: local slices of the bank metadata
+        assert c_total == config.n_clauses_total, (c_total, config)
+        votes = jax.lax.dynamic_slice_in_dim(votes, c_offset, C_loc, 0)
+        clause_class = jax.lax.dynamic_slice_in_dim(clause_class, c_offset, C_loc, 0)
+        pol = jax.lax.dynamic_slice_in_dim(pol, c_offset, C_loc, 0)
     p_act = 1.0 if config.boost_true_positive else (config.s - 1.0) / config.s
     T = config.threshold
     B = x.shape[0]
+    b_base = jnp.asarray(b_offset).astype(jnp.uint32)
 
     infer_blocks = {}
     if fused and autotune:
@@ -324,20 +351,24 @@ def tm_train_step_kernel(
             chunk_b, C_tot, W, config.n_classes, interpret=interpret
         )
 
-    def chunk_delta(xc, yc, b_offset, valid):
+    def chunk_delta(xc, yc, b_off, valid):
         lits = tm.literals(xc)
         lit_words = packetizer.pack_bits(lits)
         if fused:
             # launch 1: class sums via the fused-inference accumulator
             # (training semantics: no nonempty mask) — bit-identical ints
-            # to fire @ votes.
+            # to fire @ votes.  On a clause shard these are PARTIAL sums
+            # over the local bank; ``sums_reduce`` (a psum over the
+            # clause-shard axis) completes them exactly (int32 addition).
             sums = _fused_infer_kernel.fused_tm_forward(
                 lit_words, inc_words, votes, None,
                 interpret=interpret, **infer_blocks,
             )
+            if sums_reduce is not None:
+                sums = sums_reduce(sums)
             kn, p_t, p_n = feedback_probs(
                 jnp.clip(sums, -T, T), yc, config.n_classes, T, seed,
-                b_offset=b_offset,
+                b_offset=b_off,
             )
             if valid is not None:     # padded tail samples select nothing
                 p_t = jnp.where(valid, p_t, 0.0)
@@ -346,18 +377,26 @@ def tm_train_step_kernel(
             return _fused_train_kernel.fused_tm_train_delta(
                 ta_state, lits, lit_words, inc_words, yc, kn, p_t, p_n,
                 clause_class, pol, seed,
-                p_act=p_act, p_inact=1.0 / config.s, b_offset=b_offset,
+                p_act=p_act, p_inact=1.0 / config.s, b_offset=b_off,
+                c_offset=c_offset, c_total=c_total,
                 interpret=interpret, **(blocks or {}),
             )
         fire = clause_fire(lit_words, inc_words, **kw).astype(jnp.uint8)
+        sums = None
+        if sums_reduce is not None:   # clause shard: complete the partials
+            sums = jnp.clip(
+                sums_reduce(fire.astype(jnp.int32) @ votes), -T, T
+            )
         ftype, _ = feedback_plan(
-            fire, yc, votes, clause_class, pol, T, seed, b_offset=b_offset,
+            fire, yc, votes, clause_class, pol, T, seed, b_offset=b_off,
+            c_offset=c_offset, sums=sums,
         )
         if valid is not None:
             ftype = jnp.where(valid[:, None], ftype, jnp.uint8(0))
         return ta_delta(
             ta_state, lits, fire, ftype, seed,
-            p_act=p_act, p_inact=1.0 / config.s, b_offset=b_offset, **kw,
+            p_act=p_act, p_inact=1.0 / config.s, b_offset=b_off,
+            c_offset=c_offset, c_total=c_total, **kw,
         )
 
     if batch_chunk and B > batch_chunk:
@@ -373,12 +412,12 @@ def tm_train_step_kernel(
 
         def body(acc, inp):
             i, xc, yc = inp
-            b_off = i * jnp.uint32(batch_chunk)
+            local_off = i * jnp.uint32(batch_chunk)
             valid = (
-                (jnp.arange(batch_chunk, dtype=jnp.uint32) + b_off)
+                (jnp.arange(batch_chunk, dtype=jnp.uint32) + local_off)
                 < jnp.uint32(B)
             ) if need_mask else None
-            return acc + chunk_delta(xc, yc, b_off, valid), None
+            return acc + chunk_delta(xc, yc, b_base + local_off, valid), None
 
         delta, _ = jax.lax.scan(
             body,
@@ -386,7 +425,7 @@ def tm_train_step_kernel(
             (jnp.arange(n, dtype=jnp.uint32), xs, ys),
         )
     else:
-        delta = chunk_delta(x, y, 0, None)
+        delta = chunk_delta(x, y, b_base, None)
     new_ta = jnp.clip(
         ta_state.astype(jnp.int32) + delta, -config.n_states, config.n_states - 1
     ).astype(jnp.int8)

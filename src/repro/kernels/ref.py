@@ -78,16 +78,23 @@ def ta_delta_ref(
     p_act: float,
     p_inact: float,
     b_offset=0,           # global index of lits[0] (batch-chunked training)
+    c_offset=0,           # global index of ta[0] (clause-sharded training)
+    c_total: int | None = None,  # global clause count when ta is a shard
 ) -> jax.Array:
     """Summed feedback delta over the batch -> (C, L) int32.
 
     Random draws use ``hash_u32(global_index, seed)`` with
-    global_index = ((b + b_offset) * C + c) * L + l  (uint32, wraps — fine
-    for RNG); ``b_offset`` makes chunked evaluation bit-identical to
-    unchunked.
+    global_index = ((b + b_offset) * Cg + c + c_offset) * L + l  (uint32,
+    wraps — fine for RNG); ``b_offset`` makes chunked evaluation
+    bit-identical to unchunked.  ``c_total`` (with ``c_offset``) switches
+    the clause index to GLOBAL ids in a bank of ``c_total`` clauses, so a
+    clause shard reproduces exactly the full-bank stream's draws for its
+    rows; the default (``c_total=None``) keeps local indexing, matching the
+    unfused per-shard composition the pre-sharded tests pin down.
     """
     B, L = lits.shape
     C = ta.shape[0]
+    Cg = C if c_total is None else c_total
     t_act = prob_to_u32(p_act)
     t_inact = prob_to_u32(p_inact)
 
@@ -95,8 +102,10 @@ def ta_delta_ref(
         jnp.arange(B, dtype=jnp.uint32) + jnp.uint32(b_offset)
     )[:, None, None]
     c_idx = jnp.arange(C, dtype=jnp.uint32)[None, :, None]
+    if c_total is not None:
+        c_idx = c_idx + jnp.uint32(c_offset)
     l_idx = jnp.arange(L, dtype=jnp.uint32)[None, None, :]
-    gidx = (b_idx * jnp.uint32(C) + c_idx) * jnp.uint32(L) + l_idx
+    gidx = (b_idx * jnp.uint32(Cg) + c_idx) * jnp.uint32(L) + l_idx
     r = hash_u32(gidx, seed)                                   # (B, C, L)
 
     lit_on = (lits[:, None, :] == 1)                           # (B, 1->C, L)

@@ -28,7 +28,7 @@ from repro.kernels import ref as kref
 def _ta_delta_kernel(
     scal_ref, ta_ref, lit_ref, fire_ref, ft_ref, out_ref,
     *, n_batch: int, c_dim: int, l_dim: int, block_c: int, block_l: int,
-    t_act, t_inact,
+    t_act, t_inact, global_clause: bool,
 ):
     c0 = pl.program_id(0) * block_c
     l0 = pl.program_id(1) * block_l
@@ -37,6 +37,8 @@ def _ta_delta_kernel(
     l_idx = l0 + jax.lax.broadcasted_iota(jnp.uint32, (block_c, block_l), 1)
     seed = scal_ref[0, 0]
     b_off = scal_ref[0, 1]   # runtime scalar: chunk loops pass traced offsets
+    if global_clause:        # clause-sharded caller: hash on GLOBAL clause id
+        c_idx = c_idx + scal_ref[0, 2]
 
     excl = ta_ref[...] < 0                                    # (bc, bl)
 
@@ -65,7 +67,8 @@ def _ta_delta_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p_act", "p_inact", "block_c", "block_l", "interpret"),
+    static_argnames=("p_act", "p_inact", "block_c", "block_l", "interpret",
+                     "c_total"),
 )
 def ta_delta(
     ta: jax.Array,       # (C, L) int8
@@ -77,11 +80,18 @@ def ta_delta(
     p_act: float,
     p_inact: float,
     b_offset: int = 0,
+    c_offset=0,
+    c_total: int | None = None,
     block_c: int = 256,
     block_l: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """(C, L) int32 batch-summed feedback delta == kernels/ref.py:ta_delta_ref."""
+    """(C, L) int32 batch-summed feedback delta == kernels/ref.py:ta_delta_ref.
+
+    ``c_total`` (static, with runtime ``c_offset``) switches the automaton
+    hash to GLOBAL clause ids in a bank of ``c_total`` clauses — the
+    clause-sharded trainer's indexing; the default keeps local ids.
+    """
     C, L = ta.shape
     B = lits.shape[0]
     block_c = min(block_c, _rup(C, 8))
@@ -95,19 +105,21 @@ def ta_delta(
     scal = jnp.stack([
         jnp.asarray(seed).astype(jnp.uint32),
         jnp.asarray(b_offset).astype(jnp.uint32),
-    ]).reshape(1, 2)
+        jnp.asarray(c_offset).astype(jnp.uint32),
+    ]).reshape(1, 3)
 
     grid = (Cp // block_c, Lp // block_l)
     out = pl.pallas_call(
         functools.partial(
             _ta_delta_kernel,
-            n_batch=B, c_dim=C, l_dim=L,
+            n_batch=B, c_dim=C if c_total is None else c_total, l_dim=L,
             block_c=block_c, block_l=block_l,
             t_act=kref.prob_to_u32(p_act), t_inact=kref.prob_to_u32(p_inact),
+            global_clause=c_total is not None,
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 2), lambda c, l: (0, 0)),            # seed/b_off
+            pl.BlockSpec((1, 3), lambda c, l: (0, 0)),            # seed/offs
             pl.BlockSpec((block_c, block_l), lambda c, l: (c, l)),  # ta
             pl.BlockSpec((B, block_l), lambda c, l: (0, l)),        # lits
             pl.BlockSpec((B, block_c), lambda c, l: (0, c)),        # fire

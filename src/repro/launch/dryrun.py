@@ -44,8 +44,10 @@ def _mesh(name: str):
         return make_production_mesh(multi_pod=True)
     if name == "pod":
         return make_production_mesh(multi_pod=False)
-    d, m = (int(x) for x in name.split("x"))
-    return jax.make_mesh((d, m), ("data", "model"))
+    # "DxM" shorthand or "model=N" / "data=D,model=M" axis specs
+    from repro.launch.mesh import parse_mesh_spec
+
+    return parse_mesh_spec(name)
 
 
 def _named(tree, mesh):
@@ -151,7 +153,9 @@ class SkipCell(Exception):
 TM_SHAPES = {
     "tm_train": dict(batch=8192, kind="train"),
     "tm_train_matmul": dict(batch=8192, kind="train", algorithm="matmul"),
+    "tm_train_fused": dict(batch=8192, kind="train", engine="kernel"),
     "tm_infer": dict(batch=65536, kind="infer"),
+    "tm_infer_fused": dict(batch=65536, kind="infer", engine="kernel"),
 }
 
 
@@ -163,10 +167,15 @@ def _lower_tm_cell(arch: str, shape_name: str, mesh):
     B = spec["batch"]
     C, L = config.n_clauses_total, config.n_literals
     W = packetizer.n_words(L)
+    engine = spec.get("engine", "gspmd")
+    # the *_fused cells lower the clause-sharded shard_map schedule with the
+    # fused Pallas kernels as the per-shard body (interpret mode off-TPU)
+    kernel_kw = dict(use_kernel=True) if engine == "kernel" else {}
 
     if spec["kind"] == "train":
         fn = tm_shd.sharded_train_step_fn(
-            config, mesh, algorithm=spec.get("algorithm", "bitwise")
+            config, mesh, algorithm=spec.get("algorithm", "bitwise"),
+            engine=engine, **kernel_kw,
         )
         args = (
             jax.ShapeDtypeStruct((C, L), jnp.int8),
@@ -179,7 +188,7 @@ def _lower_tm_cell(arch: str, shape_name: str, mesh):
         mf = 2.0 * B * C * L
         return fn.lower(*args), mf
 
-    fn = tm_shd.sharded_predict_fn(config, mesh)
+    fn = tm_shd.sharded_predict_fn(config, mesh, **kernel_kw)
     args = (
         jax.ShapeDtypeStruct((C, W), jnp.uint32),
         jax.ShapeDtypeStruct((C, config.n_classes), jnp.int32),

@@ -24,6 +24,55 @@ def make_host_mesh(data: int = 2, model: int = 4):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh_spec(spec: str):
+    """CLI ``--mesh`` spec -> Mesh.
+
+    Accepts ``model=N``, ``data=D,model=M``, ``pod=P,data=D,model=M`` (axis
+    order is canonicalised to pod, data, model) and the dry-run's bare
+    ``DxM`` shorthand for ``data=D,model=M``.  Raises a clear error when the
+    host doesn't expose enough devices (on CPU set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initialises).
+    """
+    spec = spec.strip()
+
+    def _bad():
+        return ValueError(
+            f"bad --mesh spec {spec!r}: expected e.g. 'model=4', "
+            "'data=2,model=4', or 'DxM' (axes: pod, data, model; "
+            "'model' is required — it is the clause-shard axis)"
+        )
+
+    if "=" not in spec and "x" in spec:
+        parts = spec.split("x")
+        if len(parts) != 2 or not all(p.strip().isdigit() for p in parts):
+            raise _bad()
+        axes = {"data": int(parts[0]), "model": int(parts[1])}
+    else:
+        axes = {}
+        for part in spec.split(","):
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if k not in ("pod", "data", "model") or not v.strip().isdigit():
+                raise _bad()
+            axes[k] = int(v)
+    if "model" not in axes or any(v < 1 for v in axes.values()):
+        raise _bad()
+    names = tuple(k for k in ("pod", "data", "model") if k in axes)
+    shape = tuple(axes[k] for k in names)
+    need = 1
+    for s in shape:
+        need *= s
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"--mesh {spec!r} needs {need} devices but only {have} visible; "
+            "on CPU export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} before running"
+        )
+    return jax.make_mesh(shape, names)
+
+
 # TPU v5e hardware constants (roofline denominators)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -48,22 +48,61 @@ def serve_tm(args) -> None:
 
     bucket = args.bucket
     use_kernel, interpret = ops.kernel_dispatch()
-    blocks = {}
-    if use_kernel and args.autotune:
+
+    def tuned_blocks(n_clauses):
+        # autotune the shape the kernel ACTUALLY runs: per-shard C_loc on a
+        # mesh, the whole unique bank otherwise
+        if not (use_kernel and args.autotune):
+            return {}
         from repro.kernels import autotune
 
         blocks = autotune.autotune_fused_blocks(
-            bucket, compiled.n_unique, compiled.n_words_active,
+            bucket, n_clauses, compiled.n_words_active,
             compiled.n_classes, interpret=interpret,
         )
-        print("autotuned blocks:", blocks)
+        print(f"autotuned blocks (C={n_clauses}):", blocks)
+        return blocks
 
     # donation recycles each bucket's literal buffer on accelerators
     donate = (0,) if jax.default_backend() != "cpu" else ()
-    run_bucket = jax.jit(
-        lambda xw: compiler.run_compiled(compiled, xw, **blocks).argmax(-1),
-        donate_argnums=donate,
-    )
+    if args.mesh:
+        # clause-sharded serve: the compiled artifact's unique-clause bank
+        # splits over `model` (banks bigger than one core's VMEM), each
+        # shard runs the fused kernel, one (B, K) class-sum psum completes
+        # the adder bank; requests shard over the data axes.
+        from repro.core import sharding as tm_sharding
+        from repro.launch.mesh import parse_mesh_spec
+
+        mesh = parse_mesh_spec(args.mesh)
+        n_model = mesh.shape["model"]
+        U = compiled.n_unique
+        Up = -(-U // n_model) * n_model
+        blocks = tuned_blocks(Up // n_model)
+        # zero include words never violate -> padded clauses fire but carry
+        # zero votes, so the class sums are unchanged.
+        inc_sh = jnp.asarray(np.pad(compiled.include_words,
+                                    ((0, Up - U), (0, 0))))
+        votes_sh = jnp.asarray(np.pad(compiled.votes, ((0, Up - U), (0, 0))))
+        ne_sh = jnp.asarray(np.ones((Up,), np.uint8))
+        word_ids = jnp.asarray(compiled.word_ids)
+        fwd = tm_sharding.sharded_forward_fn(mesh, blocks=blocks or None)
+        print(f"mesh {dict(mesh.shape)}: {Up} unique clauses sharded over "
+              f"model={n_model} ({Up // n_model}/shard)")
+
+        # same jit + donation shape as the unsharded path: the dead-word
+        # slice and argmax fuse into one dispatch per bucket, and the
+        # bucket's literal buffer is recycled on accelerators
+        run_bucket = jax.jit(
+            lambda xw: fwd(inc_sh, votes_sh, ne_sh,
+                           xw[:, word_ids]).argmax(-1),
+            donate_argnums=donate,
+        )
+    else:
+        blocks = tuned_blocks(compiled.n_unique)
+        run_bucket = jax.jit(
+            lambda xw: compiler.run_compiled(compiled, xw, **blocks).argmax(-1),
+            donate_argnums=donate,
+        )
 
     Xr, _ = make_boolean_classification(
         args.requests, config.n_features, config.n_classes, seed=2
@@ -84,6 +123,8 @@ def serve_tm(args) -> None:
     dt = time.perf_counter() - t0
     preds = np.concatenate([np.asarray(o) for o in outs])[:n]
     path = "fused-kernel" if use_kernel else "oracle"
+    if args.mesh:
+        path = f"clause-sharded {path} ({args.mesh})"
     print(f"{n} inferences in {n_buckets} buckets of {bucket} [{path}] "
           f"in {dt * 1e3:.2f} ms ({n / dt:,.0f} inf/s, "
           f"{dt / n * 1e6:.2f} us/inf)")
@@ -139,6 +180,11 @@ def main() -> None:
                     help="TM streaming bucket size (one jit trace per run)")
     ap.add_argument("--autotune", action="store_true",
                     help="autotune fused-kernel block sizes for the bucket shape")
+    ap.add_argument("--mesh", default=None,
+                    help="TM: mesh spec, e.g. 'model=4' — shard the compiled "
+                         "clause bank over the mesh (fused kernel per shard, "
+                         "one class-sum psum); on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--n-train", type=int, default=2000)
     ap.add_argument("--batch-size", type=int, default=4)

@@ -68,13 +68,62 @@ def train_tm(args) -> None:
     )
     if args.use_kernel:
         step_kw["use_kernel"] = True
+    sharded_step = None
+    if args.mesh:
+        # clause-sharded shard_map schedule: automata over `model`, batch
+        # over the data axes, fused kernels per shard — bit-identical to
+        # the single-device step (sharding.py engine="kernel").
+        from repro.core import sharding as tm_sharding
+        from repro.launch.mesh import parse_mesh_spec
+
+        mesh = parse_mesh_spec(args.mesh)
+        if config.n_clauses_total % mesh.shape["model"]:
+            raise SystemExit(
+                f"clause axis ({config.n_clauses_total}) not divisible by "
+                f"mesh model={mesh.shape['model']}; pick a divisor (configs "
+                "pad via clause_pad_multiple)")
+        blocks = None
+        if args.autotune:
+            # autotune the PER-SHARD shapes (C_loc clauses, B_loc samples)
+            # outside the shard_map trace and pin them via `blocks`
+            uk, interp = ops.kernel_dispatch(
+                True if args.use_kernel else None, None)
+            if uk and not args.no_fuse:
+                from repro.core import packetizer
+                from repro.kernels import autotune as _autotune
+
+                d_size = 1
+                for ax in ("pod", "data"):
+                    d_size *= mesh.shape.get(ax, 1)
+                C_loc = config.n_clauses_total // mesh.shape["model"]
+                B_loc = max(1, args.batch_size // d_size)
+                if args.batch_chunk and B_loc > args.batch_chunk:
+                    B_loc = args.batch_chunk
+                blocks = _autotune.autotune_fused_train_blocks(
+                    B_loc, C_loc, packetizer.n_words(config.n_literals),
+                    config.n_literals, config.n_classes, interpret=interp)
+                print("autotuned sharded blocks:", blocks)
+            else:
+                print("--autotune ignored: fused kernel path inactive "
+                      "(need --use-kernel/REPRO_USE_PALLAS=1, no --no-fuse)")
+        sharded_step = tm_sharding.sharded_train_step_fn(
+            config, mesh, batch_chunk=args.batch_chunk, engine="kernel",
+            fuse=not args.no_fuse, blocks=blocks,
+            use_kernel=True if args.use_kernel else None,
+        )
+        print(f"mesh {dict(mesh.shape)}: clause axis sharded over "
+              f"model={mesh.shape['model']}")
     for step in range(start_step, args.steps):
         mon.start_step()
         xb, yb = next(it)
-        ta, _ = ops.tm_train_step_kernel(
-            config, ta, jnp.asarray(xb), jnp.asarray(yb), jnp.uint32(step),
-            **step_kw,
-        )
+        if sharded_step is not None:
+            ta = sharded_step(ta, jnp.asarray(xb), jnp.asarray(yb),
+                              jnp.uint32(step))
+        else:
+            ta, _ = ops.tm_train_step_kernel(
+                config, ta, jnp.asarray(xb), jnp.asarray(yb),
+                jnp.uint32(step), **step_kw,
+            )
         flag = mon.end_step(step)
         if flag:
             print(f"straggler flagged: {flag}")
@@ -174,6 +223,11 @@ def main() -> None:
     ap.add_argument("--use-kernel", action="store_true",
                     help="TM: force the Pallas kernel path (same as "
                          "REPRO_USE_PALLAS=1)")
+    ap.add_argument("--mesh", default=None,
+                    help="TM: mesh spec, e.g. 'model=4' or 'data=2,model=4' "
+                         "— clause-sharded shard_map training step (on CPU "
+                         "export XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N first)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=20)

@@ -1,0 +1,137 @@
+"""CI machinery: the bench regression gate and the autotune cache under
+concurrent writers."""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(REPO, "scripts", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _report(us, *, backend="cpu", interpret=True, name="fusedinfer_fused_b1"):
+    return dict(
+        benchmark="fused_infer", backend=backend, interpret_mode=interpret,
+        rows=[
+            dict(name=name, us_per_call=us, derived=""),
+            dict(name="fusedinfer_unfused_b1", us_per_call=us * 2, derived=""),
+        ],
+    )
+
+
+@pytest.fixture
+def cb(tmp_path):
+    mod = _load_check_bench()
+
+    def write(fname, report):
+        p = tmp_path / fname
+        p.write_text(json.dumps(report))
+        return str(p)
+
+    return mod, write
+
+
+def test_check_bench_passes_within_factor(cb):
+    mod, write = cb
+    base = write("base.json", _report(1000.0))
+    fresh = write("fresh.json", _report(1800.0))    # 1.8x < 2x: fine
+    assert mod.main(["--pair", f"{base}:{fresh}"]) == 0
+
+
+def test_check_bench_fails_on_injected_regression(cb):
+    """The acceptance-criteria case: a synthetic >2x regression of the lead
+    fused shape exits non-zero."""
+    mod, write = cb
+    base = write("base.json", _report(1000.0))
+    fresh = write("fresh.json", _report(2500.0))    # 2.5x > 2x: gate trips
+    assert mod.main(["--pair", f"{base}:{fresh}"]) == 1
+    # tighter factor trips earlier
+    fresh_ok = write("fresh2.json", _report(1500.0))
+    assert mod.main(["--pair", f"{base}:{fresh_ok}", "--factor", "1.2"]) == 1
+
+
+def test_check_bench_missing_or_benchless_fresh_fails(cb):
+    mod, write = cb
+    base = write("base.json", _report(1000.0))
+    assert mod.main(["--pair", f"{base}:/nonexistent.json"]) == 1
+    # a fresh report with no fused row means the fused bench never ran
+    empty = write("empty.json", dict(backend="cpu", interpret_mode=True,
+                                     rows=[]))
+    assert mod.main(["--pair", f"{base}:{empty}"]) == 1
+
+
+def test_check_bench_skips_cross_backend_comparison(cb):
+    """TPU fresh numbers never gate against a CPU-interpret baseline."""
+    mod, write = cb
+    base = write("base.json", _report(1000.0))
+    fresh = write("fresh.json", _report(9000.0, backend="tpu",
+                                        interpret=False))
+    assert mod.main(["--pair", f"{base}:{fresh}"]) == 0
+
+
+def test_check_bench_gates_sharded_mesh_rows(cb):
+    mod, write = cb
+    base = write("b.json", _report(1000.0, name="shardedtrain_mesh_b1"))
+    fresh = write("f.json", _report(5000.0, name="shardedtrain_mesh_b1"))
+    assert mod.main(["--pair", f"{base}:{fresh}"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache: concurrent writers must never corrupt the file
+# ---------------------------------------------------------------------------
+
+_TUNE_PROC = """
+import os, sys
+os.environ["JAX_PLATFORMS"] = "cpu"
+from repro.kernels import autotune
+i = int(sys.argv[1])
+# every process sweeps the SAME shape (the contended entry) plus one
+# process-distinct shape (so merges happen against a moving file)
+cands = ((8, 128, 1),)
+autotune.autotune_fused_blocks(9, 17, 1, 2, interpret=True,
+                               candidates=cands, reps=1, refresh=True)
+autotune.autotune_fused_blocks(9 + i, 17, 1, 2, interpret=True,
+                               candidates=cands, reps=1, refresh=True)
+print("TUNED", i)
+"""
+
+
+def test_autotune_cache_concurrent_writers(tmp_path):
+    """N processes autotuning into the same $REPRO_AUTOTUNE_CACHE: the file
+    must stay whole (valid JSON, current schema) — the atomic os.replace
+    save means last-writer-wins per entry, never a torn file."""
+    cache = tmp_path / "tune.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_AUTOTUNE_CACHE=str(cache), JAX_PLATFORMS="cpu")
+    procs = [
+        subprocess.Popen([sys.executable, "-c", _TUNE_PROC, str(i)],
+                         env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True)
+        for i in range(4)
+    ]
+    for p in procs:
+        out, err = p.communicate(timeout=600)
+        assert p.returncode == 0, out + err
+        assert "TUNED" in out
+
+    from repro.kernels import autotune
+
+    raw = json.loads(cache.read_text())      # parses: never torn
+    assert raw["schema"] == autotune._SCHEMA_VERSION
+    entries = raw["entries"]
+    assert any("B9:" in k for k in entries)  # the contended entry survived
+    for v in entries.values():               # every entry is structurally whole
+        assert set(v["blocks"]) == {"block_b", "block_c", "block_w"}
+    # no stray temp files left behind
+    assert [f.name for f in tmp_path.iterdir()] == ["tune.json"]

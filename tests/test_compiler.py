@@ -65,6 +65,7 @@ def _check_dont_touch_equals_optimized(seed):
 
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.hypothesis_optional
     @settings(max_examples=20, deadline=None)
     @given(
         n_features=st.integers(3, 80),
@@ -76,6 +77,7 @@ if HAVE_HYPOTHESIS:
     def test_compiled_equals_dense(n_features, n_classes, cpc, density, seed):
         _check_compiled_equals_dense(n_features, n_classes, cpc, density, seed)
 
+    @pytest.mark.hypothesis_optional
     @settings(max_examples=20, deadline=None)
     @given(seed=st.integers(0, 1000))
     def test_dont_touch_equals_optimized(seed):

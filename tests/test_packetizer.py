@@ -42,11 +42,13 @@ if HAVE_HYPOTHESIS:
         )
     )
 
+    @pytest.mark.hypothesis_optional
     @settings(max_examples=30, deadline=None)
     @given(bits_arrays)
     def test_pack_unpack_roundtrip(bits):
         _check_pack_unpack_roundtrip(np.array(bits, dtype=np.uint8))
 
+    @pytest.mark.hypothesis_optional
     @settings(max_examples=30, deadline=None)
     @given(bits_arrays)
     def test_np_and_jnp_twins_agree(bits):

@@ -167,6 +167,7 @@ def _check_thermometer_monotone(n_bits):
 
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.hypothesis_optional
     @settings(max_examples=15, deadline=None)
     @given(st.integers(2, 6))
     def test_thermometer_monotone(n_bits):
