@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   * fusedtrain_* — fused single-pass TRAINING kernel (clause fire ->
     feedback -> TA delta in one pallas_call) vs the three-dispatch
     pipeline vs the jnp oracle (-> BENCH_fused_train.json)
+  * sparseinfer_* — block-sparse compiled-schedule inference on a trained
+    artifact vs the dense fused kernel vs the uncompiled bank
+    (-> BENCH_sparse_infer.json; speedup scales with model sparsity)
   * roofline_* — per dry-run cell roofline terms (deliverable g)
 """
 
@@ -73,7 +76,8 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (fused_infer, fused_train, hcb_pipeline,
-                            logic_sharing, roofline_report, table1_inference)
+                            logic_sharing, roofline_report, sparse_infer,
+                            table1_inference)
 
     # Per-benchmark status (name -> ok | skipped | "fail: <exc>") so the CI
     # log shows which benchmark actually ran — wall times alone can't
@@ -103,12 +107,22 @@ def main() -> int:
         fused_train.write_report(r)
         return r
 
+    def _sparse_infer():
+        r = sparse_infer.run(fast=args.fast)
+        sparse_infer.write_report(r)
+        return r
+
     section("fused_infer", _fused_infer)
     section("fused_train", _fused_train)
     if args.fast:
+        # sparse_infer: the CI bench job already trains + times this
+        # artifact via scripts/bench_smoke.py (fresh_sparse.json);
+        # re-running the heavy train-and-time would double its share
+        status["sparse_infer"] = "skipped (covered by scripts/bench_smoke.py)"
         status["table1_inference"] = "skipped"
         status["logic_sharing"] = "skipped"
     else:
+        section("sparse_infer", _sparse_infer)
         section("table1_inference", lambda: table1_inference.run("mnist"))
         section("logic_sharing", lambda: logic_sharing.run("mnist"))
     section("roofline", roofline_report.run)

@@ -1,8 +1,8 @@
 """Fast fused-kernel microbenchmarks -> BENCH_fused_infer.json +
-BENCH_fused_train.json.
+BENCH_fused_train.json + BENCH_sparse_infer.json.
 
     PYTHONPATH=src python scripts/bench_smoke.py [--full] [--reps N]
-        [--no-autotune] [--only {infer,train}]
+        [--no-autotune] [--only {infer,train,sparse}]
 
 A CI-sized smoke of the fused single-pass TM kernels against their legacy
 pipelines and the jnp oracles on identical shapes:
@@ -12,6 +12,9 @@ pipelines and the jnp oracles on identical shapes:
   * training (src/repro/kernels/fused_train.py: clause fire -> feedback ->
     TA delta in one pallas_call) vs the three-dispatch pipeline ->
     ``BENCH_fused_train.json``
+  * block-sparse compiled-schedule inference on a TRAINED artifact
+    (src/repro/kernels/sparse_infer.py) vs the dense fused kernel vs the
+    uncompiled bank -> ``BENCH_sparse_infer.json``
 
 Appends nothing: each run rewrites the report files with fresh numbers +
 backend metadata, so the perf trajectory of the fused kernels is a per-PR
@@ -41,14 +44,16 @@ def main() -> None:
                     help="rounds for the (heavier) training benchmark")
     ap.add_argument("--out", default="BENCH_fused_infer.json")
     ap.add_argument("--out-train", default="BENCH_fused_train.json")
+    ap.add_argument("--out-sparse", default="BENCH_sparse_infer.json")
     ap.add_argument("--no-autotune", action="store_true",
                     help="use default fused block sizes instead of the "
                          "cached autotuner sweep")
-    ap.add_argument("--only", choices=("infer", "train"), default=None,
-                    help="run just one of the two benchmarks")
+    ap.add_argument("--only", choices=("infer", "train", "sparse"),
+                    default=None,
+                    help="run just one of the three benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import fused_infer, fused_train
+    from benchmarks import fused_infer, fused_train, sparse_infer
 
     rows = []
     if args.only in (None, "infer"):
@@ -61,6 +66,11 @@ def main() -> None:
                                      autotune=not args.no_autotune)
         fused_train.write_report(train_rows, args.out_train)
         rows += train_rows
+    if args.only in (None, "sparse"):
+        sparse_rows = sparse_infer.run(fast=not args.full, reps=args.reps,
+                                       autotune=not args.no_autotune)
+        sparse_infer.write_report(sparse_rows, args.out_sparse)
+        rows += sparse_rows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -69,6 +79,8 @@ def main() -> None:
         print(f"wrote {args.out}")
     if args.only in (None, "train"):
         print(f"wrote {args.out_train}")
+    if args.only in (None, "sparse"):
+        print(f"wrote {args.out_sparse}")
 
 
 if __name__ == "__main__":

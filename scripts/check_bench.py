@@ -3,21 +3,26 @@
     python scripts/check_bench.py \
         --pair BENCH_fused_infer.json:fresh_infer.json \
         --pair BENCH_fused_train.json:fresh_train.json \
+        --pair BENCH_sparse_infer.json:fresh_sparse.json \
         [--factor 2.0]
 
-For each baseline:fresh pair, compares the LEAD fused row (the first
-``*_fused_*`` row — bench modules emit the lead shape first) and exits
-non-zero when the fresh time exceeds ``factor`` x the committed baseline.
-The committed ``BENCH_fused_*.json`` files are the cross-PR perf
-trajectory; this gate turns them from "diffable artifact" into an enforced
-floor — a PR that makes the fused kernels >2x slower in interpret mode
-fails CI instead of silently regressing the trajectory.
+For each baseline:fresh pair, compares the LEAD row (the first
+``*_fused_*`` / ``*_sparse_*`` / ``*_mesh_*`` row — bench modules emit the
+lead shape first) and exits non-zero when the fresh time exceeds
+``factor`` x the committed baseline.  The committed ``BENCH_*.json`` files
+are the cross-PR perf trajectory; this gate turns them from "diffable
+artifact" into an enforced floor — a PR that makes the kernels >2x slower
+in interpret mode fails CI instead of silently regressing the trajectory.
 
 Comparisons are only meaningful between like runs: when backend or
 interpret-mode metadata differs between baseline and fresh (e.g. a TPU
 runner checking against a CPU-interpret baseline), the pair is reported as
 ``skipped`` and does not fail the gate.  Missing/unparseable fresh files DO
-fail — a bench that crashed must not pass.
+fail — a bench that crashed must not pass — and so does a committed
+baseline that is unparseable or parses without a lead row (a broken
+trajectory file must be refreshed, not silently exempted from the gate
+forever).  Only a missing baseline FILE skips: that is the expected state
+of a brand-new benchmark's first PR.
 
 Known limitation: same-backend hardware skew (a CI runner class slower
 than the machine that recorded the baseline) is indistinguishable from a
@@ -38,11 +43,11 @@ import sys
 
 
 def lead_fused_row(report: dict) -> dict | None:
-    """First fused (or sharded-mesh) row — bench modules emit the lead
-    shape first, so this is the shape the gate tracks."""
+    """First fused / sparse-schedule / sharded-mesh row — bench modules
+    emit the lead shape first, so this is the shape the gate tracks."""
     for row in report.get("rows", []):
         name = row.get("name", "")
-        if "_fused_" in name or "_mesh_" in name:
+        if "_fused_" in name or "_mesh_" in name or "_sparse_" in name:
             return row
     return None
 
@@ -52,8 +57,15 @@ def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
     try:
         with open(baseline_path) as f:
             base = json.load(f)
-    except (OSError, ValueError) as e:
+    except FileNotFoundError as e:
+        # a brand-new benchmark's first PR has no committed baseline yet
         return f"skipped: no baseline ({e})"
+    except (OSError, ValueError) as e:
+        # a baseline that EXISTS but cannot be read or parsed (permissions,
+        # truncation, merge conflict markers) must fail like a missing lead
+        # row — otherwise the gate is silently bypassed on every future PR
+        raise RegressionError(
+            f"committed baseline {baseline_path!r} unreadable: {e}")
     try:
         with open(fresh_path) as f:
             fresh = json.load(f)
@@ -68,7 +80,12 @@ def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
     b_row = lead_fused_row(base)
     f_row = lead_fused_row(fresh)
     if b_row is None:
-        return "skipped: baseline has no fused row"
+        # a COMMITTED baseline with no lead row is a broken trajectory
+        # file (e.g. a bench refactor dropped the fused rows) — fail
+        # loudly instead of silently skipping the gate forever
+        raise RegressionError(
+            f"{baseline_path}: committed baseline has no lead "
+            "fused/sparse/mesh row — refresh the BENCH file")
     if f_row is None:
         raise RegressionError(
             f"{fresh_path}: no fused row — the fused bench did not run")

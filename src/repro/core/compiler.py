@@ -15,10 +15,18 @@ explicit, host-side (numpy) compilation pass with three optimizations:
   3. **Dead-word elimination** — packed literal words that no surviving
      clause includes are never loaded (column pruning).  This is the
      bandwidth optimization: the accelerator only streams words that matter.
+  4. **Chain-schedule emission** — unique clauses are clustered by
+     (chain length, active-word signature) and each clause's include bits
+     become a compacted literal-id chain, tiled into a CSR-like
+     block-sparse execution schedule (``kernels/sparse_infer.py``).  The
+     sparse fused kernel walks only the tiles that exist, so inference
+     work scales with the artifact's include count — the paper's
+     "miniscule number of AND gates" — instead of ``C x W``.
 
 The compiled artifact runs through the same bitpacked evaluation path (and
-Pallas kernel) as the dense model and is *provably equivalent* to dense
-inference (tests/test_compiler.py, hypothesis property).
+Pallas kernels) as the dense model and is *provably equivalent* to dense
+inference (tests/test_compiler.py + tests/test_sparse_infer.py, hypothesis
+properties).
 """
 
 from __future__ import annotations
@@ -84,7 +92,14 @@ class CompileStats:
 
 @dataclasses.dataclass
 class CompiledTM:
-    """Deployable inference artifact (the "bitstream" analog)."""
+    """Deployable inference artifact (the "bitstream" analog).
+
+    Rows of ``include_words``/``votes`` are in :func:`cluster_order` (chain
+    length, then active-word signature) so the block-sparse schedules built
+    from them get chain-length-homogeneous clause blocks.  Schedules are
+    memoized per ``(block_c, block_j)`` tiling — the autotuner picks the
+    tiling, the artifact answers with the matching tile table.
+    """
 
     include_words: np.ndarray   # (U, Wa) uint32 — deduped, word-compacted
     word_ids: np.ndarray        # (Wa,) int32 — active word indices into dense W
@@ -92,6 +107,7 @@ class CompiledTM:
     n_features: int
     n_classes: int
     stats: CompileStats
+    _schedules: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def n_unique(self) -> int:
@@ -101,18 +117,50 @@ class CompiledTM:
     def n_words_active(self) -> int:
         return self.include_words.shape[1]
 
+    def schedule(self, block_c: int | None = None, block_j: int | None = None):
+        """Block-sparse chain schedule for this artifact at the given
+        tiling (defaults from ``kernels/sparse_infer.py``), memoized."""
+        from repro.kernels import sparse_infer
+
+        key = (
+            block_c or sparse_infer.DEFAULT_BLOCK_C,
+            block_j or sparse_infer.DEFAULT_BLOCK_J,
+        )
+        if key not in self._schedules:
+            self._schedules[key] = sparse_infer.build_schedule(
+                self.include_words, block_c=key[0], block_j=key[1]
+            )
+        return self._schedules[key]
+
+    @property
+    def default_schedule(self):
+        return self.schedule()
+
     def save(self, path: str) -> None:
+        # the default-tiling schedule ships inside the artifact (the
+        # "bitstream" carries its execution schedule); other tilings are
+        # rebuilt on demand from the include rows
+        sched = self.default_schedule
         np.savez_compressed(
             path,
             include_words=self.include_words,
             word_ids=self.word_ids,
             votes=self.votes,
+            sched_chain_ids=sched.chain_ids,
+            sched_tiles=np.stack([sched.tile_cb, sched.tile_jb,
+                                  sched.tile_first, sched.tile_last])
+            if sched.n_tiles else np.zeros((4, 0), np.int32),
+            sched_counts=sched.counts,
             meta=np.frombuffer(
                 json.dumps(
                     dict(
                         n_features=self.n_features,
                         n_classes=self.n_classes,
                         stats=self.stats.as_dict(),
+                        schedule=dict(block_c=sched.block_c,
+                                      block_j=sched.block_j,
+                                      n_rows=sched.n_rows,
+                                      n_lit_bits=sched.n_lit_bits),
                     )
                 ).encode(),
                 dtype=np.uint8,
@@ -121,6 +169,8 @@ class CompiledTM:
 
     @staticmethod
     def load(path: str) -> "CompiledTM":
+        from repro.kernels import sparse_infer
+
         z = np.load(path)
         meta = json.loads(bytes(z["meta"]).decode())
         st = meta["stats"]
@@ -131,7 +181,7 @@ class CompiledTM:
                 "n_partial_terms_dense", "n_partial_terms_unique",
             ) if k in st}
         )
-        return CompiledTM(
+        compiled = CompiledTM(
             include_words=z["include_words"],
             word_ids=z["word_ids"],
             votes=z["votes"],
@@ -139,6 +189,27 @@ class CompiledTM:
             n_classes=meta["n_classes"],
             stats=stats,
         )
+        if "schedule" in meta:   # pre-schedule artifacts rebuild lazily
+            sm = meta["schedule"]
+            tiles = z["sched_tiles"]
+            counts = z["sched_counts"]
+            # save() ships the DEFAULT-tiling schedule; memoize it under
+            # the default (requested) key — sm["block_c"] is the clipped
+            # effective value, which small artifacts would never look up
+            compiled._schedules[(sparse_infer.DEFAULT_BLOCK_C,
+                                 sparse_infer.DEFAULT_BLOCK_J)] = (
+                sparse_infer.SparseSchedule(
+                    block_c=sm["block_c"], block_j=sm["block_j"],
+                    n_rows=sm["n_rows"], n_lit_bits=sm["n_lit_bits"],
+                    chain_ids=z["sched_chain_ids"],
+                    tile_cb=tiles[0], tile_jb=tiles[1],
+                    tile_first=tiles[2], tile_last=tiles[3],
+                    counts=counts,
+                    indptr=np.concatenate(
+                        [[0], np.cumsum(counts)]).astype(np.int32),
+                )
+            )
+        return compiled
 
 
 def compile_tm(
@@ -147,11 +218,16 @@ def compile_tm(
     *,
     dedup: bool = True,
     prune_words: bool = True,
+    cluster: bool = True,
 ) -> CompiledTM:
     """Compile a trained automata bank into a :class:`CompiledTM`.
 
-    ``dedup=False, prune_words=False`` is the DON'T-TOUCH-pragma analog used
-    by benchmarks/logic_sharing.py to measure the savings (paper Fig. 8).
+    ``cluster`` reorders the surviving unique clauses by (chain length,
+    active-word signature) — the row order the block-sparse schedule wants;
+    votes move with their rows, so class sums are invariant.
+    ``dedup=False, prune_words=False, cluster=False`` is the
+    DON'T-TOUCH-pragma analog used by benchmarks/logic_sharing.py to
+    measure the savings (paper Fig. 8).
     """
     ta = np.asarray(ta_state)
     C_raw = config.n_clauses_raw
@@ -192,6 +268,14 @@ def compile_tm(
         word_ids = np.arange(uniq.shape[1], dtype=np.int32)
     uniq = uniq[:, word_ids]
 
+    votes = votes[:U]
+    if cluster and U > 1:
+        from repro.kernels import sparse_infer
+
+        order = sparse_infer.cluster_order(uniq)
+        uniq = uniq[order]
+        votes = votes[order]
+
     # partial-clause sharing opportunity: unique nonzero include words per
     # word column (zero words are free — they never gate anything)
     nonzero_terms = int((uniq != 0).sum())
@@ -212,7 +296,7 @@ def compile_tm(
     return CompiledTM(
         include_words=uniq.astype(np.uint32),
         word_ids=word_ids,
-        votes=votes[:U],
+        votes=votes,
         n_features=config.n_features,
         n_classes=config.n_classes,
         stats=stats,
@@ -226,6 +310,7 @@ def run_compiled(
     use_kernel: bool | None = None,
     interpret: bool | None = None,
     fuse: bool = True,
+    sparse: bool | None = None,
     **blocks,
 ) -> jnp.ndarray:
     """Inference with the compiled artifact: (B, W_dense) packed literals ->
@@ -233,21 +318,54 @@ def run_compiled(
 
     Dispatch defers to ``kernels/ops`` resolution: ``use_kernel=None``
     follows ``REPRO_USE_PALLAS``; ``interpret=None`` compiles on TPU and
-    interprets elsewhere (no more unconditional ``interpret=True``).  The
-    kernel path runs the fused single-pass kernel (``fuse=False`` for the
-    legacy two-kernel pipeline); otherwise the pure-jnp oracle.  Empty-clause
-    masking is unnecessary here — compilation already dropped empty clauses
-    (the degenerate all-empty artifact keeps one all-zero clause whose votes
+    interprets elsewhere.  On the kernel path the DEFAULT is the
+    block-sparse schedule kernel (``kernels/sparse_infer.py``) — the
+    artifact's chain schedule drives a ragged tile grid, so work scales
+    with the trained model's include count.  ``sparse=False`` pins the
+    dense fused single-pass kernel; ``fuse=False`` the legacy two-kernel
+    pipeline; otherwise the pure-jnp oracle.  Empty-clause masking is
+    unnecessary here — compilation already dropped empty clauses (the
+    degenerate all-empty artifact keeps one all-zero clause whose votes
     are zero).
+
+    Sparse-path tiling comes from ``blocks`` keys ``block_c``/``block_j``
+    (schedule tiling, memoized on the artifact) and ``block_s`` (sample
+    slab); the dense paths keep their ``block_b``/``block_c``/``block_w``.
+    A caller that pins dense-only keys (``block_b``/``block_w``) without
+    an explicit ``sparse=`` keeps the dense fused kernel — a dense-tuned
+    configuration must not be silently reinterpreted as a schedule tiling.
     """
     from repro.kernels import ops
 
+    known = {"block_b", "block_c", "block_w", "block_j", "block_s"}
+    unknown = blocks.keys() - known
+    if unknown:
+        # the per-path whitelists below would silently drop a typo like
+        # block_ww=8, serving at default tilings while the caller believes
+        # their tuning applied
+        raise TypeError(f"run_compiled: unknown block kwargs {sorted(unknown)}; "
+                        f"expected a subset of {sorted(known)}")
+
     xw = x_packed[:, jnp.asarray(compiled.word_ids)]        # dead-word elim
-    inc = jnp.asarray(compiled.include_words)
     votes = jnp.asarray(compiled.votes)
+    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    if sparse is None:
+        # the sparse schedule rides the fused default, unless the caller
+        # passed a dense-kernel tiling
+        sparse = fuse and not ({"block_b", "block_w"} & blocks.keys())
+    if uk and fuse and sparse:
+        sched = compiled.schedule(blocks.get("block_c"), blocks.get("block_j"))
+        return ops.tm_forward_schedule(
+            xw, compiled.include_words, votes, sched,
+            use_kernel=True, interpret=it,
+            block_s=blocks.get("block_s"),
+        )
+    inc = jnp.asarray(compiled.include_words)
+    dense_blocks = {k: v for k, v in blocks.items()
+                    if k in ("block_b", "block_c", "block_w")}
     return ops.tm_forward_packed(
         xw, inc, votes, None,
-        use_kernel=use_kernel, interpret=interpret, fuse=fuse, **blocks,
+        use_kernel=uk, interpret=it, fuse=fuse, **dense_blocks,
     )
 
 

@@ -93,6 +93,53 @@ def sharded_forward_fn(mesh: Mesh, *, use_kernel: bool | None = None,
     return jax.jit(fwd)
 
 
+def sharded_schedule_forward_fn(mesh: Mesh, *,
+                                block_c: int, block_j: int,
+                                block_s: int | None = None,
+                                use_kernel: bool | None = None,
+                                interpret: bool | None = None):
+    """Clause-sharded COMPILED-SCHEDULE forward: each ``model`` shard owns
+    its own block-sparse tile table (built by
+    ``kernels/sparse_infer.stack_shard_schedules``) and runs the
+    scalar-prefetched chain kernel on its local clause bank; one int32
+    ``psum`` over ``model`` completes the adder bank.  The batch shards
+    over the data axes.
+
+    Signature of the returned jit'd fn:
+    ``(chain_stack (n, Cp, Jp), votes_stack (n, Cp, K),
+    tile_stack (n, 4, T), lit_words (B, Wa)) -> (B, K) int32``.
+
+    Exact: per-shard partial sums are integers, and no-op padding tiles
+    (all-sentinel chains, never first/last) equalize tile counts across
+    shards without touching any shard's class sums.
+    """
+    from repro.kernels import ops, sparse_infer
+
+    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    d = data_axes(mesh)
+    bs = block_s or sparse_infer.DEFAULT_BLOCK_S
+
+    def body(chain_loc, votes_loc, tiles_loc, lw_loc):
+        chain, vt, tiles = chain_loc[0], votes_loc[0], tiles_loc[0]
+        if uk:
+            sums = sparse_infer.sparse_tm_forward_tables(
+                lw_loc, chain, vt, tiles,
+                block_c=block_c, block_j=block_j, block_s=bs, interpret=it,
+            )
+        else:
+            sums = sparse_infer.schedule_class_sums_ref(lw_loc, chain, vt)
+        return jax.lax.psum(sums, "model")
+
+    fwd = jax_compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", None, None), P("model", None, None),
+                  P("model", None, None), P(d, None)),
+        out_specs=P(d, None),
+        check_vma=False,
+    )
+    return jax.jit(fwd)
+
+
 def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh, *,
                        use_kernel: bool | None = None,
                        interpret: bool | None = None, fuse: bool = True,

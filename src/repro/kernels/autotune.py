@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import fused_infer, fused_train
+from repro.kernels import fused_infer, fused_train, sparse_infer
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _KEY_VERSION = "v1"
@@ -46,6 +46,20 @@ _DEFAULT_CANDIDATES = (
     (256, 256, 32),
     (512, 512, 16),   # few big tiles: minimal grid overhead (small models)
     (64, 512, 64),
+    (512, 1024, 256),  # whole word chain per step (wide-literal shapes)
+)
+
+# sparse (chain-schedule) kernel candidates: (block_c, block_j, block_s) —
+# clause bank x chain-tile bits x sample-word slab.  The schedule is
+# rebuilt per candidate (tile tables depend on the tiling), so the sweep
+# measures real tile counts, not synthetic occupancy.
+_SPARSE_CANDIDATES = (
+    (512, 32, 16),    # sparse_infer.py defaults
+    (1024, 32, 16),
+    (512, 64, 16),
+    (256, 32, 16),
+    (1024, 64, 8),
+    (512, 16, 16),
 )
 
 # training kernel candidates: the delta accumulator block is (block_c, L),
@@ -131,8 +145,14 @@ def _sweep(runs: dict, reps: int) -> dict:
 _PROC_CACHE: dict = {}
 
 
-def _memoized_best(key: str, make_runs, reps: int, refresh: bool) -> dict:
-    """Sweep (or recall) the best {block_b, block_c, block_w} for `key`."""
+_DENSE_KEYS = ("block_b", "block_c", "block_w")
+
+
+def _memoized_best(key: str, make_runs, reps: int, refresh: bool,
+                   block_names=_DENSE_KEYS) -> dict:
+    """Sweep (or recall) the best block dict for `key`; ``block_names``
+    labels the candidate-tuple fields (dense kernels use block_b/c/w, the
+    sparse schedule kernel block_c/j/s)."""
     pkey = (cache_path(), key)
     if not refresh and pkey in _PROC_CACHE:
         return dict(_PROC_CACHE[pkey])
@@ -150,8 +170,7 @@ def _memoized_best(key: str, make_runs, reps: int, refresh: bool) -> dict:
         (blk for blk, t in timings.items() if t <= t_min * 1.05),
         key=lambda blk: blk[0] * blk[1] * blk[2],
     )
-    bb, bc, bw = best_blocks
-    result = dict(block_b=bb, block_c=bc, block_w=bw)
+    result = dict(zip(block_names, best_blocks))
     cache = _load_cache()   # re-read to narrow the concurrent-writer window
     cache[key] = dict(blocks=result, us_per_call=timings[best_blocks] * 1e6)
     _save_cache(cache)
@@ -206,6 +225,67 @@ def autotune_fused_blocks(
         }
 
     return _memoized_best(key, make_runs, reps, refresh)
+
+
+def _artifact_tag(include_words) -> str:
+    """Short content hash of an artifact's include rows: the sparse
+    kernel's runtime depends on the SCHEDULE (tile counts, chain lengths),
+    so two same-shape artifacts with different sparsity must not share a
+    cache entry.  Same hashing rule as the schedule memo
+    (``sparse_infer.artifact_tag``)."""
+    return sparse_infer.artifact_tag(include_words)[:10]
+
+
+def _clip_sparse_candidate(blocks, B: int, U: int):
+    bc, bj, bs = blocks
+    bc = min(bc, fused_infer._rup(max(U, 1), 8))
+    bs = max(min(bs, fused_infer._rup(-(-B // 32), 1)), 1)
+    return bc, bj, bs
+
+
+def autotune_sparse_infer_blocks(
+    B: int,
+    K: int,
+    include_words,
+    *,
+    interpret: bool,
+    candidates=None,
+    reps: int = 5,
+    refresh: bool = False,
+) -> dict:
+    """Best ``{block_c, block_j, block_s}`` for a SPARSE-schedule artifact.
+
+    Cached under ``sparse_infer:`` keys that include a content hash of the
+    include rows — the ragged tile grid's cost is a property of the
+    trained artifact, not just its shape.  Each candidate is timed on the
+    real schedule it would execute (``build_schedule`` per tiling).
+    """
+    iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
+    U, Wa = iw.shape
+    clipped = []
+    for cand in candidates or _SPARSE_CANDIDATES:
+        c = _clip_sparse_candidate(cand, B, U)
+        if c not in clipped:
+            clipped.append(c)
+    key = (f"sparse_infer:{_KEY_VERSION}:{_mode_backend(interpret)}:"
+           f"B{B}:U{U}:W{Wa}:K{K}:sig{_artifact_tag(iw)}:"
+           f"cands[{_cands_tag(clipped)}]")
+
+    def make_runs():
+        rng = np.random.default_rng(0)
+        lit = jnp.asarray(rng.integers(0, 2**32, (B, Wa), dtype=np.uint32))
+        votes = jnp.asarray(rng.integers(-2, 3, (U, K), dtype=np.int32))
+        runs = {}
+        for bc, bj, bs in clipped:
+            sched = sparse_infer.build_schedule(iw, block_c=bc, block_j=bj)
+            runs[(bc, bj, bs)] = functools.partial(
+                sparse_infer.sparse_tm_forward, lit, votes, sched,
+                block_s=bs, interpret=interpret,
+            )
+        return runs
+
+    return _memoized_best(key, make_runs, reps, refresh,
+                          block_names=("block_c", "block_j", "block_s"))
 
 
 def autotune_fused_train_blocks(

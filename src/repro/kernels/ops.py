@@ -23,6 +23,7 @@ from repro.kernels import clause_eval as _clause_eval_kernel
 from repro.kernels import fused_infer as _fused_infer_kernel
 from repro.kernels import fused_train as _fused_train_kernel
 from repro.kernels import ref
+from repro.kernels import sparse_infer as _sparse_infer_kernel
 from repro.kernels import ta_update as _ta_update_kernel
 from repro.kernels import xnor_popcount as _xnor_kernel
 
@@ -156,6 +157,61 @@ def tm_forward_packed(
     if nonempty is not None:
         fired = fired * nonempty[None, :].astype(fired.dtype)
     return class_sums(fired, votes, **kw, **cs_blocks)
+
+
+def tm_forward_schedule(
+    lit_words: jax.Array,       # (B, Wa) packed literals (word-compacted)
+    include_words,              # (U, Wa) uint32 — np or jax; oracle operand
+    votes: jax.Array,           # (U, K) int32 multiplicity x polarity
+    schedule=None,              # kernels/sparse_infer.SparseSchedule
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    autotune: bool = False,
+    block_s: int | None = None,
+    **blocks,
+) -> jax.Array:
+    """Compiled-artifact class sums via the block-sparse chain schedule.
+
+    Kernel path: ``sparse_infer.sparse_tm_forward`` — the scalar-prefetched
+    ragged tile grid, work proportional to the artifact's include bits.
+    Otherwise the jnp oracle (vacuous-AND semantics: no nonempty mask —
+    valid because ``compile_tm`` artifacts give all-zero rows zero votes;
+    do NOT call this with a raw model whose empty clauses carry votes).
+    ``schedule=None`` builds (or, with ``autotune=True``, sweeps) the
+    tiling from ``include_words``.
+    """
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel:
+        if schedule is None:
+            import numpy as np
+
+            inc_np = np.asarray(include_words)
+            if autotune and not blocks and block_s is None:
+                from repro.kernels import autotune as _autotune
+
+                B = lit_words.shape[0]
+                tuned = _autotune.autotune_sparse_infer_blocks(
+                    B, votes.shape[1], inc_np, interpret=interpret
+                )
+                blocks = {k: tuned[k] for k in ("block_c", "block_j")}
+                block_s = tuned["block_s"]
+            # content-memoized: the schedule is an identity-hashed jit
+            # static arg, so per-call rebuilds would re-lower the kernel
+            schedule = _sparse_infer_kernel.build_schedule_cached(
+                inc_np,
+                block_c=blocks.get(
+                    "block_c", _sparse_infer_kernel.DEFAULT_BLOCK_C),
+                block_j=blocks.get(
+                    "block_j", _sparse_infer_kernel.DEFAULT_BLOCK_J),
+            )
+        return _sparse_infer_kernel.sparse_tm_forward(
+            lit_words, votes, schedule,
+            block_s=block_s or _sparse_infer_kernel.DEFAULT_BLOCK_S,
+            interpret=interpret,
+        )
+    fired = ref.clause_fire_ref(lit_words, jnp.asarray(include_words))
+    return ref.class_sum_ref(fired, votes)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,494 @@
+"""Pallas TPU kernel: block-sparse compiled TM inference over a chain schedule.
+
+The dense fused kernel (``fused_infer.py``) streams EVERY literal word for
+every clause block — on a trained model that is almost all wasted work:
+MATADOR's central observation (paper §II) is that a trained clause includes
+a miniscule fraction of its literals, so its AND chain needs only the
+included bits.  This kernel executes a **compiled chain schedule** emitted
+by ``core/compiler.py``:
+
+  * unique clauses are clustered by (chain length, active-word signature) so
+    clauses with similar include structure land in the same clause block;
+  * each clause's include BITS become a compacted chain — a sorted list of
+    literal ids, padded with a sentinel id whose literal column is constant
+    1 (an AND identity, so ragged chains stay exact);
+  * per clause block, the chain splits into ``(block_c, block_j)`` tiles and
+    a CSR-like table records each block's tile count; the flattened tile
+    list (clause-block id, chain-block id, first/last flags) is
+    scalar-prefetched so the grid only visits tiles that exist — the
+    block-sparse flash-attention pattern, with the ragged inner grid driven
+    by ``PrefetchScalarGridSpec`` index maps.
+
+The datapath is bit-parallel over SAMPLES (the hardware trick of the TM
+accelerators the paper cites): literals are bit-transposed so row ``l`` of
+``litT`` packs literal ``l`` of 32 consecutive datapoints into one uint32.
+The carried clause state (``Clause In``/``Clause Out`` of paper Fig. 5) is
+then a (block_c, block_s) bitvector in VMEM scratch, and one chain step is
+``ok &= litT[chain_id]`` — work scales with the number of INCLUDE BITS in
+the artifact, not with ``C x W``.  An ``lax.cond`` early-exit skips a
+tile's gather+AND chain entirely once its carried clause state is all-zero
+(every clause in the block already dead for every sample in the slab).
+
+On the last tile of a block the finished clause bits are unpacked and
+folded into the int32 class sums through the deduped multiplicity x
+polarity vote matrix — dedup fan-out stays in the kernel, and the fired
+matrix never exists in HBM.
+
+Correctness contract: all-zero include rows (clause-padding and the
+degenerate all-empty artifact) FIRE under this kernel (vacuous AND), so
+their vote rows must be zero — true for every ``compile_tm`` artifact
+(empty clauses are dropped at compile time).  Do not point this kernel at
+a raw (uncompiled) model whose empty clauses carry votes.
+
+Like the other kernels in this package the schedule path is validated
+bit-exactly against the jnp oracle in Pallas interpret mode; compiled TPU
+lowering of the in-kernel row gather is tracked in ROADMAP "Next".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packetizer
+from repro.kernels.fused_infer import _rup
+
+# default chain tiling: 512-clause banks, 32-bit chain tiles, 16-word
+# (512-sample) slabs — see kernels/autotune.py for the swept alternatives
+DEFAULT_BLOCK_C = 512
+DEFAULT_BLOCK_J = 32
+DEFAULT_BLOCK_S = 16
+
+
+# eq=False: identity hashing, so a schedule works as a jit static argument
+# (its ndarray fields are unhashable by value); compile memoizes schedules
+# per artifact, so identity is stable across calls.
+@dataclasses.dataclass(frozen=True, eq=False)
+class SparseSchedule:
+    """Compiled block-sparse execution schedule for one clause bank.
+
+    ``chain_ids[c, j]`` is the literal BIT id of clause ``c``'s ``j``-th
+    chain step in the packed-word bit layout (literal ``32*w + i`` = bit
+    ``i`` of word ``w``); entries past the clause's include count hold
+    ``sentinel`` (= ``n_lit_bits``), whose transposed literal row is
+    constant 1.  ``counts``/``indptr`` are the CSR view over chain tiles
+    per clause block; ``tile_*`` are the flattened (scalar-prefetched)
+    tile table the kernel's ragged grid walks.  Tiles with
+    ``tile_first == tile_last == 0`` and an all-sentinel chain block are
+    no-op padding (used to equalize tile counts across shards).
+    """
+
+    block_c: int
+    block_j: int
+    n_rows: int                 # unique clauses covered (pre-padding)
+    n_lit_bits: int             # sentinel id == index of the all-ones row
+    chain_ids: np.ndarray       # (Cp, Jp) int32
+    tile_cb: np.ndarray         # (T,) int32 clause-block id per tile
+    tile_jb: np.ndarray         # (T,) int32 chain-block id per tile
+    tile_first: np.ndarray      # (T,) int32 1 = first tile of its block
+    tile_last: np.ndarray       # (T,) int32 1 = last tile of its block
+    counts: np.ndarray          # (n_cblocks,) int32 tiles per clause block
+    indptr: np.ndarray          # (n_cblocks + 1,) int32 CSR row pointers
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_cb.shape[0])
+
+    @property
+    def n_cblocks(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def n_tiles_dense(self) -> int:
+        """Tiles a dense chain over the full literal space would visit."""
+        per_block = -(-self.n_lit_bits // self.block_j)
+        return self.n_cblocks * per_block
+
+    @property
+    def tile_sparsity(self) -> float:
+        """Fraction of the dense (clause-block x chain-block) grid skipped."""
+        dense = self.n_tiles_dense
+        real = int(self.counts.sum())   # padding tiles are not chain work
+        return 1.0 - real / dense if dense else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(
+            block_c=self.block_c, block_j=self.block_j,
+            n_tiles=self.n_tiles, n_tiles_dense=self.n_tiles_dense,
+            tile_sparsity=self.tile_sparsity,
+        )
+
+
+def cluster_order(include_words: np.ndarray) -> np.ndarray:
+    """Clause permutation that clusters rows by chain structure.
+
+    Primary key: include-bit count (chain length), so clause blocks are
+    chain-length homogeneous and the per-block padded chain ``Jp`` tracks
+    the block's own clauses instead of the global maximum.  Secondary:
+    active-word signature then word values, lexicographic — clauses sharing
+    sub-chains become block neighbours (DMA locality, and the whole block's
+    carried state dies together for the early-exit).
+    """
+    iw = np.ascontiguousarray(include_words)
+    U, Wa = iw.shape
+    if U <= 1:
+        return np.arange(U)
+    act = iw != 0
+    nbits = packetizer.unpack_bits_np(iw, Wa * 32).sum(axis=1)
+    # np.lexsort: LAST key is primary
+    keys = [iw[:, j] for j in range(Wa - 1, -1, -1)]
+    keys += [act[:, j].astype(np.uint8) for j in range(Wa - 1, -1, -1)]
+    keys.append(nbits)
+    return np.lexsort(keys)
+
+
+def artifact_tag(include_words) -> str:
+    """Content hash of an artifact's include rows — THE identity of a
+    compiled bank for schedule memoization and autotune cache keys (two
+    same-shape artifacts with different sparsity must never share)."""
+    import hashlib
+
+    iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
+    h = hashlib.sha1(iw.tobytes())
+    h.update(str(iw.shape).encode())
+    return h.hexdigest()
+
+
+# schedules are identity-hashed jit static args, so repeated builds for the
+# same artifact+tiling must return the SAME object or every call re-lowers
+# the kernel; keyed by the artifact content hash.
+_SCHEDULE_CACHE: dict = {}
+
+
+def build_schedule_cached(
+    include_words: np.ndarray,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_j: int = DEFAULT_BLOCK_J,
+) -> SparseSchedule:
+    """Content-memoized :func:`build_schedule` for callers without a
+    :class:`CompiledTM` to memoize on (e.g. ``ops.tm_forward_schedule``
+    called with raw include rows in a serving loop)."""
+    key = (artifact_tag(include_words), block_c, block_j)
+    if key not in _SCHEDULE_CACHE:
+        _SCHEDULE_CACHE[key] = build_schedule(
+            np.asarray(include_words, dtype=np.uint32),
+            block_c=block_c, block_j=block_j)
+    return _SCHEDULE_CACHE[key]
+
+
+def build_schedule(
+    include_words: np.ndarray,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_j: int = DEFAULT_BLOCK_J,
+    pad_tiles_to: int | None = None,
+) -> SparseSchedule:
+    """Compile ``(U, Wa)`` packed include rows into a chain schedule.
+
+    Rows are taken in the given order (``compile_tm`` has already applied
+    :func:`cluster_order`).  ``pad_tiles_to`` appends no-op tiles so
+    shards of one artifact can share a common tile-table shape.
+    """
+    iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
+    U, Wa = iw.shape
+    n_lit_bits = Wa * 32
+    block_c = max(min(block_c, _rup(max(U, 1), 8)), 1)
+    Cp = _rup(max(U, 1), block_c)
+    bits = np.zeros((Cp, n_lit_bits), np.uint8)
+    if U:
+        bits[:U] = packetizer.unpack_bits_np(iw, n_lit_bits)
+
+    n_cblocks = Cp // block_c
+    counts = np.zeros(n_cblocks, np.int32)
+    per_clause = bits.sum(axis=1)
+    for b in range(n_cblocks):
+        j_max = int(per_clause[b * block_c:(b + 1) * block_c].max())
+        counts[b] = -(-j_max // block_j)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+    T_real = int(counts.sum())
+    T = max(T_real, pad_tiles_to or 0)
+    n_jblocks = int(counts.max()) if T_real else 0
+    pad_jblock = n_jblocks if T > T_real or n_jblocks == 0 else None
+    if pad_jblock is not None:
+        n_jblocks += 1                    # all-sentinel block for no-op tiles
+    Jp = n_jblocks * block_j
+
+    chain_ids = np.full((Cp, max(Jp, block_j)), n_lit_bits, np.int32)
+    for c in range(Cp):
+        (lids,) = np.nonzero(bits[c])
+        chain_ids[c, : lids.shape[0]] = lids
+
+    tile_cb = np.zeros(max(T, 1), np.int32)
+    tile_jb = np.zeros(max(T, 1), np.int32)
+    tile_first = np.zeros(max(T, 1), np.int32)
+    tile_last = np.zeros(max(T, 1), np.int32)
+    t = 0
+    for b in range(n_cblocks):
+        n = int(counts[b])
+        for j in range(n):
+            tile_cb[t], tile_jb[t] = b, j
+            tile_first[t] = int(j == 0)
+            tile_last[t] = int(j == n - 1)
+            t += 1
+    # no-op padding tiles: all-sentinel chain block, never first/last
+    for tt in range(t, T):
+        tile_cb[tt] = 0
+        tile_jb[tt] = pad_jblock if pad_jblock is not None else 0
+
+    return SparseSchedule(
+        block_c=block_c, block_j=block_j, n_rows=U, n_lit_bits=n_lit_bits,
+        chain_ids=chain_ids,
+        tile_cb=tile_cb[:T] if T else tile_cb[:0],
+        tile_jb=tile_jb[:T] if T else tile_jb[:0],
+        tile_first=tile_first[:T] if T else tile_first[:0],
+        tile_last=tile_last[:T] if T else tile_last[:0],
+        counts=counts, indptr=indptr,
+    )
+
+
+def bit_transpose_literals(lit_words: jax.Array, n_lit_bits: int) -> jax.Array:
+    """(B, W) packed literal words -> (n_lit_bits + 1, ceil(B/32)) uint32.
+
+    Row ``l`` packs literal ``l`` of 32 consecutive samples per word
+    (LSB-first, matching ``packetizer.pack_bits``); the appended final row
+    is constant 1 — the chain sentinel's AND identity.  Padding samples
+    beyond ``B`` read as literal 0, so any clause with at least one include
+    reports 0 for them (and all-zero rows only ever carry zero votes).
+    """
+    bits = packetizer.unpack_bits(lit_words, n_lit_bits)      # (B, L)
+    lit_t = packetizer.pack_bits(bits.T)                      # (L, Sw)
+    ones = jnp.full((1, lit_t.shape[1]), 0xFFFFFFFF, jnp.uint32)
+    return jnp.concatenate([lit_t, ones], axis=0)
+
+
+def _sparse_infer_kernel(
+    tcb_ref,    # (T,) scalar-prefetch: clause-block id per tile
+    tjb_ref,    # (T,) scalar-prefetch: chain-block id per tile
+    tfirst_ref,  # (T,) scalar-prefetch: 1 = first tile of its clause block
+    tlast_ref,  # (T,) scalar-prefetch: 1 = last tile of its clause block
+    litT_ref,   # (L + 1, block_s) uint32 bit-transposed literals
+    chain_ref,  # (block_c, block_j) int32 literal ids of this chain tile
+    votes_ref,  # (block_c, Kp) int32 multiplicity x polarity votes
+    out_ref,    # (block_s * 32, Kp) int32 class sums
+    ok_ref,     # VMEM scratch (block_c, block_s) uint32 carried clause bits
+    *,
+    block_c: int,
+    block_j: int,
+    block_s: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(tfirst_ref[t] == 1)
+    def _init_ok():   # chain start: every clause alive for every sample
+        ok_ref[...] = jnp.full_like(ok_ref, 0xFFFFFFFF)
+
+    ok0 = ok_ref[...]
+
+    def chain(ok):
+        # one gather for the whole tile's chain, then a tree-AND over the
+        # block_j bit positions (log2 ops instead of block_j — the chain
+        # is associative); sentinel ids land on the all-ones row
+        ids = chain_ref[...].reshape(-1)                      # (bc * bj,)
+        g = jnp.take(litT_ref[...], ids, axis=0)
+        g = g.reshape(block_c, block_j, block_s)
+        while g.shape[1] > 1:
+            half = g.shape[1] // 2
+            lo = g[:, :half, :] & g[:, half:2 * half, :]
+            g = (jnp.concatenate([lo, g[:, 2 * half:, :]], axis=1)
+                 if g.shape[1] % 2 else lo)
+        return ok & g[:, 0, :]
+
+    # early exit: the whole slab of clauses is already dead — skip the
+    # gather and the AND chain (Clause-Out all zero propagates unchanged)
+    ok = jax.lax.cond(jnp.any(ok0 != 0), chain, lambda o: o, ok0)
+
+    @pl.when(tlast_ref[t] == 0)
+    def _carry():   # Clause Out -> next chain tile's Clause In
+        ok_ref[...] = ok
+
+    @pl.when(tlast_ref[t] == 1)
+    def _fold():    # adder bank: unpack sample bits, fold multiplicity votes
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        fired = ((ok[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+        fired = fired.reshape(block_c, block_s * 32)          # (bc, samples)
+        out_ref[...] += jax.lax.dot_general(
+            fired.T, votes_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("schedule", "block_s", "interpret"),
+)
+def sparse_tm_forward(
+    lit_words: jax.Array,       # (B, W) uint32 packed literals
+    votes: jax.Array,           # (U, K) int32 — rows aligned with schedule
+    schedule: SparseSchedule,
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed literals -> (B, K) int32 class sums via the chain schedule.
+
+    Bit-identical to ``class_sum_ref(clause_fire_ref(lit, include_words),
+    votes)`` for the include rows the schedule was built from (vacuous-AND
+    semantics: all-zero rows fire, so their votes must be zero — guaranteed
+    by ``compile_tm``).
+    """
+    B, W = lit_words.shape
+    U, K = votes.shape
+    assert U <= schedule.chain_ids.shape[0], (U, schedule.chain_ids.shape)
+    assert schedule.n_lit_bits == W * 32, (schedule.n_lit_bits, W)
+    if schedule.n_tiles == 0:   # degenerate all-empty schedule: nothing votes
+        return jnp.zeros((B, K), jnp.int32)
+
+    Cp = schedule.chain_ids.shape[0]
+    vts = jnp.pad(votes.astype(jnp.int32), ((0, Cp - U), (0, 0)))
+    tiles = jnp.asarray(np.stack([
+        schedule.tile_cb, schedule.tile_jb,
+        schedule.tile_first, schedule.tile_last,
+    ]))   # padded clauses fire vacuously but vote 0
+    return sparse_tm_forward_tables(
+        lit_words, jnp.asarray(schedule.chain_ids), vts, tiles,
+        block_c=schedule.block_c, block_j=schedule.block_j,
+        block_s=block_s, interpret=interpret,
+    )
+
+
+def stack_shard_schedules(
+    include_words: np.ndarray,      # (U, Wa) — compile_tm row order
+    votes: np.ndarray,              # (U, K)
+    n_shards: int,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_j: int = DEFAULT_BLOCK_J,
+):
+    """Clause-shard a compiled schedule: each shard carries its own tile
+    table, padded to common shapes so the stacks shard over ``model``.
+
+    Returns ``(schedules, chain_stack, votes_stack, tile_stack, C_loc)``:
+    per-shard :class:`SparseSchedule` objects (CSR metadata), the
+    ``(n_shards, C_loc_p, Jp)`` chain-id stack, the matching vote stack,
+    and the ``(n_shards, 4, T)`` tile table (cb, jb, first, last).  Shards
+    with fewer real tiles ride on no-op padding tiles, so every shard runs
+    the same grid — partial class sums then compose exactly through one
+    int32 ``psum``.
+    """
+    iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
+    U, Wa = iw.shape
+    K = votes.shape[1]
+    C_loc = -(-max(U, 1) // n_shards)
+    C_loc = _rup(C_loc, 8)
+    Up = C_loc * n_shards
+    iw = np.pad(iw, ((0, Up - U), (0, 0)))
+    vt = np.pad(np.asarray(votes, np.int32), ((0, Up - U), (0, 0)))
+
+    schedules = [
+        build_schedule(iw[s * C_loc:(s + 1) * C_loc],
+                       block_c=block_c, block_j=block_j)
+        for s in range(n_shards)
+    ]
+    T = max(max(s.n_tiles for s in schedules), 1)
+    Jp = max(max(s.chain_ids.shape[1] for s in schedules), block_j)
+    schedules = [
+        build_schedule(iw[s * C_loc:(s + 1) * C_loc],
+                       block_c=block_c, block_j=block_j, pad_tiles_to=T)
+        for s in range(n_shards)
+    ]
+    Jp = max(max(s.chain_ids.shape[1] for s in schedules), Jp)
+    Cp = max(s.chain_ids.shape[0] for s in schedules)
+
+    chain_stack = np.full((n_shards, Cp, Jp), Wa * 32, np.int32)
+    votes_stack = np.zeros((n_shards, Cp, K), np.int32)
+    tile_stack = np.zeros((n_shards, 4, T), np.int32)
+    for s, sched in enumerate(schedules):
+        cp, jp = sched.chain_ids.shape
+        chain_stack[s, :cp, :jp] = sched.chain_ids
+        votes_stack[s, :C_loc] = vt[s * C_loc:(s + 1) * C_loc]
+        tile_stack[s, 0] = sched.tile_cb
+        tile_stack[s, 1] = sched.tile_jb
+        tile_stack[s, 2] = sched.tile_first
+        tile_stack[s, 3] = sched.tile_last
+    return schedules, chain_stack, votes_stack, tile_stack, C_loc
+
+
+def sparse_tm_forward_tables(
+    lit_words: jax.Array,       # (B, W) uint32
+    chain_ids: jax.Array,       # (Cp, Jp) int32
+    votes: jax.Array,           # (Cp, K) int32 (already padded rows)
+    tiles: jax.Array,           # (4, T) int32 — cb, jb, first, last
+    *,
+    block_c: int,
+    block_j: int,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    """Traced-table twin of :func:`sparse_tm_forward` for ``shard_map``
+    bodies: the chain/tile tables arrive as (sharded) arrays instead of a
+    static schedule, so one jit serves every shard."""
+    B, W = lit_words.shape
+    Cp, Jp = chain_ids.shape
+    K = votes.shape[1]
+    T = tiles.shape[1]
+    Kp = _rup(K, 128)
+    Sw = packetizer.n_words(B)
+    block_s = max(min(block_s, Sw), 1)
+    Swp = _rup(Sw, block_s)
+
+    litT = bit_transpose_literals(lit_words, W * 32)
+    litT = jnp.pad(litT, ((0, 0), (0, Swp - litT.shape[1])))
+    vts = jnp.pad(votes.astype(jnp.int32), ((0, 0), (0, Kp - K)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Swp // block_s, T),
+        in_specs=[
+            pl.BlockSpec((W * 32 + 1, block_s), lambda s, t, *refs: (0, s)),
+            pl.BlockSpec((block_c, block_j),
+                         lambda s, t, cb, jb, tf, tl: (cb[t], jb[t])),
+            pl.BlockSpec((block_c, Kp),
+                         lambda s, t, cb, jb, tf, tl: (cb[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s * 32, Kp), lambda s, t, *refs: (s, 0)),
+        scratch_shapes=[pltpu.VMEM((block_c, block_s), jnp.uint32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _sparse_infer_kernel,
+            block_c=block_c, block_j=block_j, block_s=block_s,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Swp * 32, Kp), jnp.int32),
+        interpret=interpret,
+    )(tiles[0], tiles[1], tiles[2], tiles[3], litT, chain_ids, vts)
+    return out[:B, :K]
+
+
+def schedule_class_sums_ref(
+    lit_words: jax.Array,       # (B, W) uint32
+    chain_ids: jax.Array,       # (Cp, Jp) int32 (sentinel = W * 32)
+    votes: jax.Array,           # (Cp, K) int32
+) -> jax.Array:
+    """jnp oracle over chain tables (the non-kernel engine of the sharded
+    schedule path): fire iff every chain literal is 1, sentinel ids read
+    constant 1.  Bit-identical to the Pallas schedule kernel."""
+    B, W = lit_words.shape
+    bits = packetizer.unpack_bits(lit_words, W * 32)          # (B, L)
+    padded = jnp.concatenate(
+        [bits, jnp.ones((B, 1), bits.dtype)], axis=1)         # sentinel col
+    g = jnp.take(padded, chain_ids.reshape(-1), axis=1)
+    fired = jnp.all(g.reshape(B, *chain_ids.shape) != 0, axis=2)
+    return fired.astype(jnp.int32) @ votes.astype(jnp.int32)

@@ -48,6 +48,9 @@ def serve_tm(args) -> None:
 
     bucket = args.bucket
     use_kernel, interpret = ops.kernel_dispatch()
+    # kernel-path default: the block-sparse chain schedule (work scales
+    # with the artifact's include bits); --no-sparse pins the dense kernel
+    sparse = use_kernel and not args.no_sparse
 
     def tuned_blocks(n_clauses):
         # autotune the shape the kernel ACTUALLY runs: per-shard C_loc on a
@@ -60,47 +63,99 @@ def serve_tm(args) -> None:
             bucket, n_clauses, compiled.n_words_active,
             compiled.n_classes, interpret=interpret,
         )
-        print(f"autotuned blocks (C={n_clauses}):", blocks)
+        print(f"autotuned dense blocks (C={n_clauses}):", blocks)
+        return blocks
+
+    def tuned_sparse_blocks(inc_rows):
+        # the schedule tiling is swept on the rows the shard actually
+        # serves, under sparse_infer: cache keys (artifact-hashed)
+        if not (use_kernel and args.autotune):
+            return {}
+        from repro.kernels import autotune
+
+        blocks = autotune.autotune_sparse_infer_blocks(
+            bucket, compiled.n_classes, inc_rows, interpret=interpret,
+        )
+        print(f"autotuned sparse blocks (U={inc_rows.shape[0]}):", blocks)
         return blocks
 
     # donation recycles each bucket's literal buffer on accelerators
     donate = (0,) if jax.default_backend() != "cpu" else ()
+    word_ids = jnp.asarray(compiled.word_ids)
     if args.mesh:
         # clause-sharded serve: the compiled artifact's unique-clause bank
         # splits over `model` (banks bigger than one core's VMEM), each
-        # shard runs the fused kernel, one (B, K) class-sum psum completes
-        # the adder bank; requests shard over the data axes.
+        # shard runs the fused kernel on its local bank — carrying its own
+        # block-sparse tile table on the sparse path — and one (B, K)
+        # class-sum psum completes the adder bank; requests shard over the
+        # data axes.
         from repro.core import sharding as tm_sharding
         from repro.launch.mesh import parse_mesh_spec
 
         mesh = parse_mesh_spec(args.mesh)
         n_model = mesh.shape["model"]
         U = compiled.n_unique
-        Up = -(-U // n_model) * n_model
-        blocks = tuned_blocks(Up // n_model)
-        # zero include words never violate -> padded clauses fire but carry
-        # zero votes, so the class sums are unchanged.
-        inc_sh = jnp.asarray(np.pad(compiled.include_words,
-                                    ((0, Up - U), (0, 0))))
-        votes_sh = jnp.asarray(np.pad(compiled.votes, ((0, Up - U), (0, 0))))
-        ne_sh = jnp.asarray(np.ones((Up,), np.uint8))
-        word_ids = jnp.asarray(compiled.word_ids)
-        fwd = tm_sharding.sharded_forward_fn(mesh, blocks=blocks or None)
-        print(f"mesh {dict(mesh.shape)}: {Up} unique clauses sharded over "
-              f"model={n_model} ({Up // n_model}/shard)")
+        if args.autotune:
+            # ROADMAP "Next": seed the per-shard C_loc cache entries for
+            # BOTH kernels so later mesh runs skip the sweeps
+            tuned_blocks(-(-U // n_model))
+        if sparse:
+            from repro.kernels import sparse_infer
 
-        # same jit + donation shape as the unsharded path: the dead-word
-        # slice and argmax fuse into one dispatch per bucket, and the
-        # bucket's literal buffer is recycled on accelerators
-        run_bucket = jax.jit(
-            lambda xw: fwd(inc_sh, votes_sh, ne_sh,
-                           xw[:, word_ids]).argmax(-1),
-            donate_argnums=donate,
-        )
+            C_loc_est = sparse_infer._rup(-(-max(U, 1) // n_model), 8)
+            sblocks = tuned_sparse_blocks(
+                np.ascontiguousarray(compiled.include_words[:C_loc_est]))
+            schedules, chain_stack, votes_stack, tile_stack, C_loc = (
+                sparse_infer.stack_shard_schedules(
+                    compiled.include_words, compiled.votes, n_model,
+                    block_c=sblocks.get(
+                        "block_c", sparse_infer.DEFAULT_BLOCK_C),
+                    block_j=sblocks.get(
+                        "block_j", sparse_infer.DEFAULT_BLOCK_J),
+                ))
+            fwd = tm_sharding.sharded_schedule_forward_fn(
+                mesh,
+                block_c=schedules[0].block_c, block_j=schedules[0].block_j,
+                block_s=sblocks.get("block_s"),
+            )
+            chains = jnp.asarray(chain_stack)
+            votes_sh = jnp.asarray(votes_stack)
+            tiles = jnp.asarray(tile_stack)
+            print(f"mesh {dict(mesh.shape)}: {C_loc * n_model} unique "
+                  f"clauses sharded over model={n_model} ({C_loc}/shard, "
+                  f"{tile_stack.shape[-1]} chain tiles/shard)")
+            run_bucket = jax.jit(
+                lambda xw: fwd(chains, votes_sh, tiles,
+                               xw[:, word_ids]).argmax(-1),
+                donate_argnums=donate,
+            )
+        else:
+            Up = -(-U // n_model) * n_model
+            blocks = tuned_blocks(Up // n_model)
+            # zero include words never violate -> padded clauses fire but
+            # carry zero votes, so the class sums are unchanged.
+            inc_sh = jnp.asarray(np.pad(compiled.include_words,
+                                        ((0, Up - U), (0, 0))))
+            votes_sh = jnp.asarray(np.pad(compiled.votes,
+                                          ((0, Up - U), (0, 0))))
+            ne_sh = jnp.asarray(np.ones((Up,), np.uint8))
+            fwd = tm_sharding.sharded_forward_fn(mesh, blocks=blocks or None)
+            print(f"mesh {dict(mesh.shape)}: {Up} unique clauses sharded "
+                  f"over model={n_model} ({Up // n_model}/shard)")
+
+            # same jit + donation shape as the unsharded path: the
+            # dead-word slice and argmax fuse into one dispatch per bucket
+            run_bucket = jax.jit(
+                lambda xw: fwd(inc_sh, votes_sh, ne_sh,
+                               xw[:, word_ids]).argmax(-1),
+                donate_argnums=donate,
+            )
     else:
-        blocks = tuned_blocks(compiled.n_unique)
+        blocks = (tuned_sparse_blocks(compiled.include_words) if sparse
+                  else tuned_blocks(compiled.n_unique))
         run_bucket = jax.jit(
-            lambda xw: compiler.run_compiled(compiled, xw, **blocks).argmax(-1),
+            lambda xw: compiler.run_compiled(
+                compiled, xw, sparse=sparse, **blocks).argmax(-1),
             donate_argnums=donate,
         )
 
@@ -122,7 +177,8 @@ def serve_tm(args) -> None:
         o.block_until_ready()
     dt = time.perf_counter() - t0
     preds = np.concatenate([np.asarray(o) for o in outs])[:n]
-    path = "fused-kernel" if use_kernel else "oracle"
+    path = ("sparse-schedule" if sparse else "fused-kernel") \
+        if use_kernel else "oracle"
     if args.mesh:
         path = f"clause-sharded {path} ({args.mesh})"
     print(f"{n} inferences in {n_buckets} buckets of {bucket} [{path}] "
@@ -180,6 +236,10 @@ def main() -> None:
                     help="TM streaming bucket size (one jit trace per run)")
     ap.add_argument("--autotune", action="store_true",
                     help="autotune fused-kernel block sizes for the bucket shape")
+    ap.add_argument("--no-sparse", action="store_true",
+                    help="TM kernel path: serve the compiled artifact with "
+                         "the dense fused kernel instead of the default "
+                         "block-sparse chain schedule")
     ap.add_argument("--mesh", default=None,
                     help="TM: mesh spec, e.g. 'model=4' — shard the compiled "
                          "clause bank over the mesh (fused kernel per shard, "

@@ -71,6 +71,44 @@ def test_check_bench_missing_or_benchless_fresh_fails(cb):
     assert mod.main(["--pair", f"{base}:{empty}"]) == 1
 
 
+def test_check_bench_baseline_without_lead_row_fails(cb, tmp_path):
+    """A committed BENCH file that parses but lost its lead row must FAIL
+    the gate (previously it skipped silently forever); a missing baseline
+    FILE still skips (a new benchmark's first PR has no baseline)."""
+    mod, write = cb
+    fresh = write("fresh.json", _report(1000.0))
+    benchless = write("benchless.json",
+                      dict(backend="cpu", interpret_mode=True,
+                           rows=[dict(name="misc_row", us_per_call=1.0,
+                                      derived="")]))
+    assert mod.main(["--pair", f"{benchless}:{fresh}"]) == 1
+    assert mod.main(["--pair", f"/nonexistent_base.json:{fresh}"]) == 0
+    # an EXISTING but unparseable baseline (truncation, conflict markers)
+    # also fails — only a missing file is the legitimate first-PR state
+    torn = tmp_path / "torn.json"
+    torn.write_text('{"rows": [<<<<<<< HEAD')
+    assert mod.main(["--pair", f"{torn}:{fresh}"]) == 1
+
+
+def test_check_bench_gates_sparse_lead_rows(cb):
+    """BENCH_sparse_infer.json lead rows (sparseinfer_sparse_*) ride the
+    same regression rule; the dense/uncompiled companion rows are not the
+    lead."""
+    mod, write = cb
+    base = write("b.json", _report(1000.0, name="sparseinfer_sparse_b512"))
+    ok = write("f_ok.json", _report(1500.0, name="sparseinfer_sparse_b512"))
+    bad = write("f_bad.json", _report(2500.0, name="sparseinfer_sparse_b512"))
+    assert mod.main(["--pair", f"{base}:{ok}"]) == 0
+    assert mod.main(["--pair", f"{base}:{bad}"]) == 1
+    # lead-row selection ignores non-lead rows ahead of the sparse row
+    report = dict(backend="cpu", interpret_mode=True, rows=[
+        dict(name="sparseinfer_oracle_b512", us_per_call=1.0, derived=""),
+        dict(name="sparseinfer_sparse_b512", us_per_call=900.0, derived=""),
+    ])
+    fresh2 = write("f2.json", report)
+    assert mod.main(["--pair", f"{base}:{fresh2}"]) == 0
+
+
 def test_check_bench_skips_cross_backend_comparison(cb):
     """TPU fresh numbers never gate against a CPU-interpret baseline."""
     mod, write = cb
