@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   * sparseinfer_* — block-sparse compiled-schedule inference on a trained
     artifact vs the dense fused kernel vs the uncompiled bank
     (-> BENCH_sparse_infer.json; speedup scales with model sparsity)
+  * terminfer_* — shared-term FACTORIZED inference (unique AND terms
+    evaluated once per sample slab) vs the flat sparse schedule vs the
+    dense kernel, + a synthetic sharing sweep (-> BENCH_term_infer.json;
+    speedup scales with the artifact's term-sharing fraction)
   * roofline_* — per dry-run cell roofline terms (deliverable g)
 """
 
@@ -77,7 +81,7 @@ def main() -> int:
 
     from benchmarks import (fused_infer, fused_train, hcb_pipeline,
                             logic_sharing, roofline_report, sparse_infer,
-                            table1_inference)
+                            table1_inference, term_infer)
 
     # Per-benchmark status (name -> ok | skipped | "fail: <exc>") so the CI
     # log shows which benchmark actually ran — wall times alone can't
@@ -112,17 +116,25 @@ def main() -> int:
         sparse_infer.write_report(r)
         return r
 
+    def _term_infer():
+        r = term_infer.run(fast=args.fast)
+        term_infer.write_report(r)
+        return r
+
     section("fused_infer", _fused_infer)
     section("fused_train", _fused_train)
     if args.fast:
-        # sparse_infer: the CI bench job already trains + times this
-        # artifact via scripts/bench_smoke.py (fresh_sparse.json);
-        # re-running the heavy train-and-time would double its share
+        # sparse_infer / term_infer: the CI bench job already trains +
+        # times these artifacts via scripts/bench_smoke.py (fresh_sparse /
+        # fresh_term.json); re-running the heavy train-and-time here would
+        # double their share
         status["sparse_infer"] = "skipped (covered by scripts/bench_smoke.py)"
+        status["term_infer"] = "skipped (covered by scripts/bench_smoke.py)"
         status["table1_inference"] = "skipped"
         status["logic_sharing"] = "skipped"
     else:
         section("sparse_infer", _sparse_infer)
+        section("term_infer", _term_infer)
         section("table1_inference", lambda: table1_inference.run("mnist"))
         section("logic_sharing", lambda: logic_sharing.run("mnist"))
     section("roofline", roofline_report.run)

@@ -143,9 +143,13 @@ def run(fast: bool = True, reps: int = 5, autotune: bool = True) -> list:
         )
 
         def compiled_fwd(sparse, **blk):
+            # factorize=False: this bench tracks the PR-4 flat bit-chain
+            # kernel; without the pin the factorize heuristic would serve
+            # the term-schedule kernel on high-sharing trained artifacts
+            # and silently corrupt the sparse trajectory row
             jitted = jax.jit(lambda l: compiler.run_compiled(
                 comp, l, use_kernel=True, interpret=interpret,
-                sparse=sparse, **blk,
+                sparse=sparse, factorize=False, **blk,
             ))
             return lambda: jitted(lit)
 

@@ -1,8 +1,8 @@
 """Fast fused-kernel microbenchmarks -> BENCH_fused_infer.json +
-BENCH_fused_train.json + BENCH_sparse_infer.json.
+BENCH_fused_train.json + BENCH_sparse_infer.json + BENCH_term_infer.json.
 
     PYTHONPATH=src python scripts/bench_smoke.py [--full] [--reps N]
-        [--no-autotune] [--only {infer,train,sparse}]
+        [--no-autotune] [--only {infer,train,sparse,term}]
 
 A CI-sized smoke of the fused single-pass TM kernels against their legacy
 pipelines and the jnp oracles on identical shapes:
@@ -15,6 +15,10 @@ pipelines and the jnp oracles on identical shapes:
   * block-sparse compiled-schedule inference on a TRAINED artifact
     (src/repro/kernels/sparse_infer.py) vs the dense fused kernel vs the
     uncompiled bank -> ``BENCH_sparse_infer.json``
+  * shared-term FACTORIZED inference on a trained thermometer artifact
+    (src/repro/kernels/term_infer.py: unique AND terms evaluated once)
+    vs the flat sparse schedule vs the dense kernel, plus a synthetic
+    sharing sweep -> ``BENCH_term_infer.json``
 
 Appends nothing: each run rewrites the report files with fresh numbers +
 backend metadata, so the perf trajectory of the fused kernels is a per-PR
@@ -45,15 +49,16 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_fused_infer.json")
     ap.add_argument("--out-train", default="BENCH_fused_train.json")
     ap.add_argument("--out-sparse", default="BENCH_sparse_infer.json")
+    ap.add_argument("--out-term", default="BENCH_term_infer.json")
     ap.add_argument("--no-autotune", action="store_true",
                     help="use default fused block sizes instead of the "
                          "cached autotuner sweep")
-    ap.add_argument("--only", choices=("infer", "train", "sparse"),
+    ap.add_argument("--only", choices=("infer", "train", "sparse", "term"),
                     default=None,
-                    help="run just one of the three benchmarks")
+                    help="run just one of the four benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import fused_infer, fused_train, sparse_infer
+    from benchmarks import fused_infer, fused_train, sparse_infer, term_infer
 
     rows = []
     if args.only in (None, "infer"):
@@ -71,6 +76,11 @@ def main() -> None:
                                        autotune=not args.no_autotune)
         sparse_infer.write_report(sparse_rows, args.out_sparse)
         rows += sparse_rows
+    if args.only in (None, "term"):
+        term_rows = term_infer.run(fast=not args.full, reps=args.reps,
+                                   autotune=not args.no_autotune)
+        term_infer.write_report(term_rows, args.out_term)
+        rows += term_rows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -81,6 +91,8 @@ def main() -> None:
         print(f"wrote {args.out_train}")
     if args.only in (None, "sparse"):
         print(f"wrote {args.out_sparse}")
+    if args.only in (None, "term"):
+        print(f"wrote {args.out_term}")
 
 
 if __name__ == "__main__":

@@ -43,11 +43,13 @@ import sys
 
 
 def lead_fused_row(report: dict) -> dict | None:
-    """First fused / sparse-schedule / sharded-mesh row — bench modules
-    emit the lead shape first, so this is the shape the gate tracks."""
+    """First fused / sparse-schedule / factorized / sharded-mesh row —
+    bench modules emit the lead shape first, so this is the shape the
+    gate tracks."""
     for row in report.get("rows", []):
         name = row.get("name", "")
-        if "_fused_" in name or "_mesh_" in name or "_sparse_" in name:
+        if ("_fused_" in name or "_mesh_" in name or "_sparse_" in name
+                or "_factorized_" in name):
             return row
     return None
 

@@ -22,6 +22,15 @@ explicit, host-side (numpy) compilation pass with three optimizations:
      sparse fused kernel walks only the tiles that exist, so inference
      work scales with the artifact's include count — the paper's
      "miniscule number of AND gates" — instead of ``C x W``.
+  5. **Shared-term factorization** — the unique (word, include-pattern)
+     AND terms across the deduped bank are extracted into a term table and
+     each clause is rewritten as a chain of TERM ids
+     (``kernels/term_infer.py``).  This is sub-clause logic sharing (paper
+     Fig. 5 absorption, the opportunity ``partial_term_sharing``
+     measures): a term shared by ``n`` clauses is evaluated once per
+     sample slab instead of ``n`` times.  The factorized kernel is the
+     kernel-path default when the artifact's measured sharing clears
+     ``FACTORIZE_SHARING_THRESHOLD``.
 
 The compiled artifact runs through the same bitpacked evaluation path (and
 Pallas kernels) as the dense model and is *provably equivalent* to dense
@@ -39,6 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packetizer, tm
+
+# kernel-path default: serve the factorized (two-level) schedule when at
+# least this fraction of the artifact's per-word AND terms are absorbed by
+# sub-clause sharing — below it the term table amortizes too little stage-1
+# work to beat the flat bit-chain kernel
+FACTORIZE_SHARING_THRESHOLD = 0.30
 
 
 @dataclasses.dataclass
@@ -108,6 +123,11 @@ class CompiledTM:
     n_classes: int
     stats: CompileStats
     _schedules: dict = dataclasses.field(default_factory=dict, repr=False)
+    _fschedules: dict = dataclasses.field(default_factory=dict, repr=False)
+    # autotuned kernel tilings recorded against this artifact (keyed
+    # "<kernel>:B<bucket>"), shipped by save() so a cold-start server loads
+    # a tuned schedule instead of re-paying the sweep
+    tuned: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def n_unique(self) -> int:
@@ -136,11 +156,73 @@ class CompiledTM:
     def default_schedule(self):
         return self.schedule()
 
+    def factorized_schedule(self, block_c: int | None = None,
+                            block_j: int | None = None,
+                            block_t: int | None = None,
+                            term_w: int | None = None):
+        """Two-level factorized (shared-term) schedule for this artifact
+        at the given tiling (defaults from ``kernels/term_infer.py``;
+        ``term_w=None`` auto-picks the bit-chain width), memoized."""
+        from repro.kernels import term_infer
+
+        if term_w is None:
+            term_w = term_infer.pick_term_width(self.include_words)
+        key = (
+            block_c or term_infer.DEFAULT_BLOCK_C,
+            block_j or term_infer.DEFAULT_BLOCK_J,
+            block_t or term_infer.DEFAULT_BLOCK_T,
+            term_w,
+        )
+        if key not in self._fschedules:
+            self._fschedules[key] = term_infer.build_factorized_schedule(
+                self.include_words, block_c=key[0], block_j=key[1],
+                block_t=key[2], term_w=key[3],
+            )
+        return self._fschedules[key]
+
+    @property
+    def default_factorized_schedule(self):
+        return self.factorized_schedule()
+
+    @staticmethod
+    def _tuned_key(kernel: str, bucket: int, rows: int | None,
+                   mode: str | None) -> str:
+        key = f"{kernel}:B{int(bucket)}"
+        if rows is not None:
+            key += f":U{int(rows)}"      # shard-slice vs full-bank sweeps
+        if mode is not None:
+            key += f":{mode}"            # backend:interp|compiled
+        return key
+
+    def record_tuned(self, kernel: str, bucket: int, blocks: dict, *,
+                     rows: int | None = None, mode: str | None = None) -> None:
+        """Remember an autotuned tiling for this artifact (persisted by
+        ``save()``): ``kernel`` is the sweep family (``sparse_infer`` /
+        ``term_infer`` / ``fused_infer``), ``bucket`` the request-batch
+        size the sweep ran at, ``rows`` the clause-row count the sweep
+        actually saw (a mesh run tunes a per-shard SLICE — its winner must
+        not answer for the full bank), and ``mode`` the backend/interpret
+        tag (``kernels/autotune._mode_backend``) so a CPU-interpret tiling
+        is never recalled on a compiled TPU server."""
+        self.tuned[self._tuned_key(kernel, bucket, rows, mode)] = dict(blocks)
+
+    def tuned_blocks(self, kernel: str, bucket: int, *,
+                     rows: int | None = None,
+                     mode: str | None = None) -> dict | None:
+        """Recall a tiling recorded by :meth:`record_tuned` (or shipped
+        inside a loaded artifact); None when this exact (kernel, bucket,
+        rows, mode) was never tuned."""
+        blocks = self.tuned.get(self._tuned_key(kernel, bucket, rows, mode))
+        return dict(blocks) if blocks is not None else None
+
     def save(self, path: str) -> None:
-        # the default-tiling schedule ships inside the artifact (the
-        # "bitstream" carries its execution schedule); other tilings are
-        # rebuilt on demand from the include rows
+        # the default-tiling schedules ship inside the artifact (the
+        # "bitstream" carries its execution schedules); other tilings are
+        # rebuilt on demand from the include rows.  Autotuned tilings
+        # recorded via record_tuned() ride in the meta JSON, so a server
+        # cold-starting from this file skips the sweep entirely.
         sched = self.default_schedule
+        fsched = self.default_factorized_schedule
         np.savez_compressed(
             path,
             include_words=self.include_words,
@@ -151,6 +233,17 @@ class CompiledTM:
                                   sched.tile_first, sched.tile_last])
             if sched.n_tiles else np.zeros((4, 0), np.int32),
             sched_counts=sched.counts,
+            fsched_term_chain=fsched.term_chain,
+            fsched_term_table=np.stack([
+                fsched.term_word,
+                fsched.term_val.astype(np.int64).astype(np.int32)])
+            if fsched.n_terms else np.zeros((2, 0), np.int32),
+            fsched_clause_chain=fsched.clause_chain,
+            fsched_tiles=np.stack([
+                fsched.tile_stage, fsched.tile_tb, fsched.tile_cb,
+                fsched.tile_jb, fsched.tile_first, fsched.tile_last])
+            if fsched.n_tiles else np.zeros((6, 0), np.int32),
+            fsched_counts=fsched.counts,
             meta=np.frombuffer(
                 json.dumps(
                     dict(
@@ -161,6 +254,14 @@ class CompiledTM:
                                       block_j=sched.block_j,
                                       n_rows=sched.n_rows,
                                       n_lit_bits=sched.n_lit_bits),
+                        fschedule=dict(block_c=fsched.block_c,
+                                       block_j=fsched.block_j,
+                                       block_t=fsched.block_t,
+                                       term_w=fsched.term_w,
+                                       n_rows=fsched.n_rows,
+                                       n_terms=fsched.n_terms,
+                                       n_lit_bits=fsched.n_lit_bits),
+                        tuned=self.tuned,
                     )
                 ).encode(),
                 dtype=np.uint8,
@@ -169,7 +270,7 @@ class CompiledTM:
 
     @staticmethod
     def load(path: str) -> "CompiledTM":
-        from repro.kernels import sparse_infer
+        from repro.kernels import sparse_infer, term_infer
 
         z = np.load(path)
         meta = json.loads(bytes(z["meta"]).decode())
@@ -209,6 +310,32 @@ class CompiledTM:
                         [[0], np.cumsum(counts)]).astype(np.int32),
                 )
             )
+        if "fschedule" in meta:   # pre-factorization artifacts rebuild lazily
+            fm = meta["fschedule"]
+            ftiles = z["fsched_tiles"]
+            fcounts = z["fsched_counts"]
+            tt = z["fsched_term_table"]
+            compiled._fschedules[(term_infer.DEFAULT_BLOCK_C,
+                                  term_infer.DEFAULT_BLOCK_J,
+                                  term_infer.DEFAULT_BLOCK_T,
+                                  fm["term_w"])] = (
+                term_infer.FactorizedSchedule(
+                    block_c=fm["block_c"], block_j=fm["block_j"],
+                    block_t=fm["block_t"], term_w=fm["term_w"],
+                    n_rows=fm["n_rows"], n_terms=fm["n_terms"],
+                    n_lit_bits=fm["n_lit_bits"],
+                    term_word=tt[0], term_val=tt[1].astype(np.uint32),
+                    term_chain=z["fsched_term_chain"],
+                    clause_chain=z["fsched_clause_chain"],
+                    tile_stage=ftiles[0], tile_tb=ftiles[1],
+                    tile_cb=ftiles[2], tile_jb=ftiles[3],
+                    tile_first=ftiles[4], tile_last=ftiles[5],
+                    counts=fcounts,
+                    indptr=np.concatenate(
+                        [[0], np.cumsum(fcounts)]).astype(np.int32),
+                )
+            )
+        compiled.tuned.update(meta.get("tuned", {}))
         return compiled
 
 
@@ -311,6 +438,7 @@ def run_compiled(
     interpret: bool | None = None,
     fuse: bool = True,
     sparse: bool | None = None,
+    factorize: bool | None = None,
     **blocks,
 ) -> jnp.ndarray:
     """Inference with the compiled artifact: (B, W_dense) packed literals ->
@@ -318,26 +446,31 @@ def run_compiled(
 
     Dispatch defers to ``kernels/ops`` resolution: ``use_kernel=None``
     follows ``REPRO_USE_PALLAS``; ``interpret=None`` compiles on TPU and
-    interprets elsewhere.  On the kernel path the DEFAULT is the
-    block-sparse schedule kernel (``kernels/sparse_infer.py``) — the
-    artifact's chain schedule drives a ragged tile grid, so work scales
-    with the trained model's include count.  ``sparse=False`` pins the
-    dense fused single-pass kernel; ``fuse=False`` the legacy two-kernel
-    pipeline; otherwise the pure-jnp oracle.  Empty-clause masking is
-    unnecessary here — compilation already dropped empty clauses (the
+    interprets elsewhere.  On the kernel path the schedule kernels are the
+    default — ``factorize=None`` picks the two-level FACTORIZED schedule
+    kernel (``kernels/term_infer.py``: each unique AND term evaluated once
+    per sample slab) when the artifact's ``partial_term_sharing`` clears
+    ``FACTORIZE_SHARING_THRESHOLD``, else the flat block-sparse chain
+    kernel (``kernels/sparse_infer.py``); ``factorize=True``/``False``
+    pins the choice.  ``sparse=False`` pins the dense fused single-pass
+    kernel; ``fuse=False`` the legacy two-kernel pipeline; otherwise the
+    pure-jnp oracle.  All engines are bit-identical.  Empty-clause masking
+    is unnecessary here — compilation already dropped empty clauses (the
     degenerate all-empty artifact keeps one all-zero clause whose votes
     are zero).
 
-    Sparse-path tiling comes from ``blocks`` keys ``block_c``/``block_j``
-    (schedule tiling, memoized on the artifact) and ``block_s`` (sample
-    slab); the dense paths keep their ``block_b``/``block_c``/``block_w``.
+    Schedule-path tiling comes from ``blocks`` keys ``block_c``/``block_j``
+    (chain tiling, memoized on the artifact), ``block_s`` (sample slab),
+    and — factorized only — ``block_t``/``term_w`` (term-table tiling);
+    the dense paths keep their ``block_b``/``block_c``/``block_w``.
     A caller that pins dense-only keys (``block_b``/``block_w``) without
     an explicit ``sparse=`` keeps the dense fused kernel — a dense-tuned
     configuration must not be silently reinterpreted as a schedule tiling.
     """
     from repro.kernels import ops
 
-    known = {"block_b", "block_c", "block_w", "block_j", "block_s"}
+    known = {"block_b", "block_c", "block_w", "block_j", "block_s",
+             "block_t", "term_w"}
     unknown = blocks.keys() - known
     if unknown:
         # the per-path whitelists below would silently drop a typo like
@@ -350,9 +483,42 @@ def run_compiled(
     votes = jnp.asarray(compiled.votes)
     uk, it = ops.kernel_dispatch(use_kernel, interpret)
     if sparse is None:
-        # the sparse schedule rides the fused default, unless the caller
+        # the chain schedules ride the fused default, unless the caller
         # passed a dense-kernel tiling
         sparse = fuse and not ({"block_b", "block_w"} & blocks.keys())
+    fact_keys = {"block_t", "term_w"} & blocks.keys()
+    if factorize is None:
+        # heuristic default: factorized execution pays when enough terms
+        # are shared for stage 1 to amortize (the compiler measured it);
+        # a factorized-only tiling key pins the factorized kernel the same
+        # way a dense-only key pins the dense one — a tuned configuration
+        # must not be silently reinterpreted
+        factorize = sparse and (
+            bool(fact_keys)
+            or compiled.stats.partial_term_sharing
+            >= FACTORIZE_SHARING_THRESHOLD
+        )
+    elif not factorize and fact_keys:
+        raise TypeError(
+            f"run_compiled: factorize=False but factorized-only block "
+            f"kwargs {sorted(fact_keys)} were passed — they would be "
+            "silently dropped")
+    if factorize and not (fuse and sparse):
+        # the docstring promises factorize=True pins the factorized
+        # engine; serving the dense kernel instead must fail loudly
+        raise TypeError(
+            "run_compiled: factorize=True requires the schedule path "
+            "(fuse=True and sparse not pinned off via sparse=False or a "
+            "dense-kernel tiling)")
+    if uk and fuse and sparse and factorize:
+        fsched = compiled.factorized_schedule(
+            blocks.get("block_c"), blocks.get("block_j"),
+            blocks.get("block_t"), blocks.get("term_w"))
+        return ops.tm_forward_factorized(
+            xw, compiled.include_words, votes, fsched,
+            use_kernel=True, interpret=it,
+            block_s=blocks.get("block_s"),
+        )
     if uk and fuse and sparse:
         sched = compiled.schedule(blocks.get("block_c"), blocks.get("block_j"))
         return ops.tm_forward_schedule(

@@ -140,6 +140,57 @@ def sharded_schedule_forward_fn(mesh: Mesh, *,
     return jax.jit(fwd)
 
 
+def sharded_factorized_forward_fn(mesh: Mesh, *,
+                                  block_t: int, block_c: int, block_j: int,
+                                  block_s: int | None = None,
+                                  use_kernel: bool | None = None,
+                                  interpret: bool | None = None):
+    """Clause-sharded FACTORIZED-schedule forward: each ``model`` shard
+    owns its own term table + tile table (built by
+    ``kernels/term_infer.stack_shard_factorized`` — terms are extracted
+    per shard, so stage 1 evaluates only the terms the shard's clauses
+    reference) and runs the two-stage kernel on its local bank; one int32
+    ``psum`` over ``model`` completes the adder bank.  The batch shards
+    over the data axes.
+
+    Signature of the returned jit'd fn:
+    ``(term_stack (n, Tp, term_w), chain_stack (n, Cp, Jp),
+    votes_stack (n, Cp, K), tile_stack (n, 6, T), lit_words (B, Wa))
+    -> (B, K) int32``.
+
+    Exact: per-shard partial sums are integers; no-op padding tiles and
+    all-sentinel padding term rows change no shard's class sums.
+    """
+    from repro.kernels import ops, term_infer
+
+    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    d = data_axes(mesh)
+    bs = block_s or term_infer.DEFAULT_BLOCK_S
+
+    def body(term_loc, chain_loc, votes_loc, tiles_loc, lw_loc):
+        term, chain, vt, tiles = (term_loc[0], chain_loc[0],
+                                  votes_loc[0], tiles_loc[0])
+        if uk:
+            sums = term_infer.factorized_tm_forward_tables(
+                lw_loc, term, chain, vt, tiles,
+                block_t=block_t, block_c=block_c, block_j=block_j,
+                block_s=bs, interpret=it,
+            )
+        else:
+            sums = term_infer.factorized_class_sums_ref(lw_loc, term, chain, vt)
+        return jax.lax.psum(sums, "model")
+
+    fwd = jax_compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None),
+                  P(d, None)),
+        out_specs=P(d, None),
+        check_vma=False,
+    )
+    return jax.jit(fwd)
+
+
 def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh, *,
                        use_kernel: bool | None = None,
                        interpret: bool | None = None, fuse: bool = True,

@@ -28,7 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import fused_infer, fused_train, sparse_infer
+import math
+
+from repro.kernels import fused_infer, fused_train, sparse_infer, term_infer
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _KEY_VERSION = "v1"
@@ -60,6 +62,23 @@ _SPARSE_CANDIDATES = (
     (256, 32, 16),
     (1024, 64, 8),
     (512, 16, 16),
+    (2048, 128, 16),  # long-chain trained banks: few big whole-chain tiles
+    (4096, 128, 16),
+)
+
+# factorized (two-level term-schedule) kernel candidates: (block_c,
+# block_j, block_t, block_s, term_w) — clause bank x term-chain tile x
+# stage-1 term tile x sample-word slab x term bit-chain width (0 = the
+# artifact's auto width).  Schedules are rebuilt per candidate: term table
+# size and tile counts depend on the tiling.
+_TERM_CANDIDATES = (
+    (1024, 64, 32768, 16, 0),   # term_infer.py defaults, auto width
+    (1024, 64, 32768, 16, 2),   # narrowest rows: fat terms split to pieces
+    (1024, 128, 32768, 16, 2),
+    (2048, 128, 32768, 16, 2),
+    (4096, 64, 32768, 16, 2),
+    (1024, 32, 16384, 16, 0),
+    (512, 32, 4096, 16, 0),     # small-artifact shapes clip here
 )
 
 # training kernel candidates: the delta accumulator block is (block_c, L),
@@ -168,7 +187,7 @@ def _memoized_best(key: str, make_runs, reps: int, refresh: bool,
     t_min = min(timings.values())
     best_blocks = max(
         (blk for blk, t in timings.items() if t <= t_min * 1.05),
-        key=lambda blk: blk[0] * blk[1] * blk[2],
+        key=lambda blk: math.prod(blk),
     )
     result = dict(zip(block_names, best_blocks))
     cache = _load_cache()   # re-read to narrow the concurrent-writer window
@@ -243,6 +262,16 @@ def _clip_sparse_candidate(blocks, B: int, U: int):
     return bc, bj, bs
 
 
+def _lit_tag(lit_words) -> str:
+    """Key fragment for a caller-supplied representative literal stream:
+    tunings measured on different workloads must not share an entry (a
+    random stream kills trained chains in one tile — its winner can lose
+    on the in-distribution stream a server actually sees)."""
+    if lit_words is None:
+        return ""
+    return ":lit" + sparse_infer.artifact_tag(np.asarray(lit_words))[:10]
+
+
 def autotune_sparse_infer_blocks(
     B: int,
     K: int,
@@ -252,6 +281,7 @@ def autotune_sparse_infer_blocks(
     candidates=None,
     reps: int = 5,
     refresh: bool = False,
+    lit_words=None,
 ) -> dict:
     """Best ``{block_c, block_j, block_s}`` for a SPARSE-schedule artifact.
 
@@ -259,6 +289,10 @@ def autotune_sparse_infer_blocks(
     include rows — the ragged tile grid's cost is a property of the
     trained artifact, not just its shape.  Each candidate is timed on the
     real schedule it would execute (``build_schedule`` per tiling).
+    ``lit_words`` supplies a representative packed request stream (e.g.
+    an in-distribution serving bucket) — without it the sweep uses
+    uniform-random literals, which let every trained chain die in its
+    first tile and can crown a tiling that loses on live traffic.
     """
     iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
     U, Wa = iw.shape
@@ -268,12 +302,14 @@ def autotune_sparse_infer_blocks(
         if c not in clipped:
             clipped.append(c)
     key = (f"sparse_infer:{_KEY_VERSION}:{_mode_backend(interpret)}:"
-           f"B{B}:U{U}:W{Wa}:K{K}:sig{_artifact_tag(iw)}:"
-           f"cands[{_cands_tag(clipped)}]")
+           f"B{B}:U{U}:W{Wa}:K{K}:sig{_artifact_tag(iw)}"
+           f"{_lit_tag(lit_words)}:cands[{_cands_tag(clipped)}]")
 
     def make_runs():
         rng = np.random.default_rng(0)
-        lit = jnp.asarray(rng.integers(0, 2**32, (B, Wa), dtype=np.uint32))
+        lit = (jnp.asarray(np.asarray(lit_words)) if lit_words is not None
+               else jnp.asarray(
+                   rng.integers(0, 2**32, (B, Wa), dtype=np.uint32)))
         votes = jnp.asarray(rng.integers(-2, 3, (U, K), dtype=np.int32))
         runs = {}
         for bc, bj, bs in clipped:
@@ -286,6 +322,75 @@ def autotune_sparse_infer_blocks(
 
     return _memoized_best(key, make_runs, reps, refresh,
                           block_names=("block_c", "block_j", "block_s"))
+
+
+def _clip_term_candidate(blocks, B: int, U: int, iw, n_pieces_bound: int
+                         ) -> tuple:
+    bc, bj, bt, bs, tw = blocks
+    bc = min(bc, fused_infer._rup(max(U, 1), 8))
+    bs = max(min(bs, fused_infer._rup(-(-B // 32), 1)), 1)
+    if tw == 0:   # 0 = the artifact's auto width (resolved so duplicate
+        tw = term_infer.pick_term_width(iw)   # post-clip candidates dedup)
+    # the schedule builder clips block_t to its term count; apply the same
+    # bound here (pieces <= total include bits) so small artifacts dedup
+    # candidates that only differ in an unreachable block_t
+    bt = max(min(bt, fused_infer._rup(n_pieces_bound + 1, 8)), 1)
+    return bc, bj, bt, bs, tw
+
+
+def autotune_term_infer_blocks(
+    B: int,
+    K: int,
+    include_words,
+    *,
+    interpret: bool,
+    candidates=None,
+    reps: int = 5,
+    refresh: bool = False,
+    lit_words=None,
+) -> dict:
+    """Best ``{block_c, block_j, block_t, block_s, term_w}`` for a
+    FACTORIZED-schedule artifact.
+
+    Cached under ``term_infer:`` keys that include a content hash of the
+    include rows — term-table size, tile counts, and the stage-1/stage-2
+    work split are all properties of the trained artifact, not its shape.
+    Each candidate is timed on the real factorized schedule it would
+    execute (``build_factorized_schedule`` per tiling).  ``lit_words``
+    supplies a representative packed request stream (see
+    :func:`autotune_sparse_infer_blocks`).
+    """
+    iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
+    U, Wa = iw.shape
+    n_bits_total = int(np.unpackbits(iw.view(np.uint8)).sum())
+    clipped = []
+    for cand in candidates or _TERM_CANDIDATES:
+        c = _clip_term_candidate(cand, B, U, iw, n_bits_total)
+        if c not in clipped:
+            clipped.append(c)
+    key = (f"term_infer:{_KEY_VERSION}:{_mode_backend(interpret)}:"
+           f"B{B}:U{U}:W{Wa}:K{K}:sig{_artifact_tag(iw)}"
+           f"{_lit_tag(lit_words)}:cands[{_cands_tag(clipped)}]")
+
+    def make_runs():
+        rng = np.random.default_rng(0)
+        lit = (jnp.asarray(np.asarray(lit_words)) if lit_words is not None
+               else jnp.asarray(
+                   rng.integers(0, 2**32, (B, Wa), dtype=np.uint32)))
+        votes = jnp.asarray(rng.integers(-2, 3, (U, K), dtype=np.int32))
+        runs = {}
+        for bc, bj, bt, bs, tw in clipped:
+            sched = term_infer.build_factorized_schedule(
+                iw, block_c=bc, block_j=bj, block_t=bt, term_w=tw)
+            runs[(bc, bj, bt, bs, tw)] = functools.partial(
+                term_infer.factorized_tm_forward, lit, votes, sched,
+                block_s=bs, interpret=interpret,
+            )
+        return runs
+
+    return _memoized_best(
+        key, make_runs, reps, refresh,
+        block_names=("block_c", "block_j", "block_t", "block_s", "term_w"))
 
 
 def autotune_fused_train_blocks(

@@ -25,6 +25,7 @@ from repro.kernels import fused_train as _fused_train_kernel
 from repro.kernels import ref
 from repro.kernels import sparse_infer as _sparse_infer_kernel
 from repro.kernels import ta_update as _ta_update_kernel
+from repro.kernels import term_infer as _term_infer_kernel
 from repro.kernels import xnor_popcount as _xnor_kernel
 
 _DEFAULT_USE_KERNEL = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
@@ -212,6 +213,71 @@ def tm_forward_schedule(
         )
     fired = ref.clause_fire_ref(lit_words, jnp.asarray(include_words))
     return ref.class_sum_ref(fired, votes)
+
+
+def tm_forward_factorized(
+    lit_words: jax.Array,       # (B, Wa) packed literals (word-compacted)
+    include_words,              # (U, Wa) uint32 — np or jax; schedule source
+    votes: jax.Array,           # (U, K) int32 multiplicity x polarity
+    schedule=None,              # kernels/term_infer.FactorizedSchedule
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    autotune: bool = False,
+    block_s: int | None = None,
+    **blocks,
+) -> jax.Array:
+    """Compiled-artifact class sums via the two-level FACTORIZED schedule.
+
+    Kernel path: ``term_infer.factorized_tm_forward`` — stage 1 evaluates
+    each unique (word, include-pattern) AND term once per sample slab into
+    a VMEM term bitvector, stage 2 chains TERM ids per clause, so shared
+    terms are computed once instead of once per clause.  Off the kernel
+    path the jnp table oracle (``factorized_class_sums_ref``) runs the
+    same two-level gather — both are bit-identical to dense ``ref``
+    semantics for ``compile_tm`` artifacts (vacuous-AND contract as in
+    ``tm_forward_schedule``).  ``schedule=None`` builds (or, with
+    ``autotune=True``, sweeps) the tiling from ``include_words``.
+    """
+    import numpy as np
+
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if schedule is None:
+        inc_np = np.asarray(include_words)
+        if (use_kernel and autotune and not blocks and block_s is None):
+            from repro.kernels import autotune as _autotune
+
+            B = lit_words.shape[0]
+            tuned = _autotune.autotune_term_infer_blocks(
+                B, votes.shape[1], inc_np, interpret=interpret
+            )
+            blocks = {k: tuned[k]
+                      for k in ("block_c", "block_j", "block_t", "term_w")}
+            block_s = tuned["block_s"]
+        # content-memoized: the schedule is an identity-hashed jit static
+        # arg, so per-call rebuilds would re-lower the kernel
+        schedule = _term_infer_kernel.build_factorized_schedule_cached(
+            inc_np,
+            block_c=blocks.get(
+                "block_c", _term_infer_kernel.DEFAULT_BLOCK_C),
+            block_j=blocks.get(
+                "block_j", _term_infer_kernel.DEFAULT_BLOCK_J),
+            block_t=blocks.get(
+                "block_t", _term_infer_kernel.DEFAULT_BLOCK_T),
+            term_w=blocks.get("term_w"),
+        )
+    if use_kernel:
+        return _term_infer_kernel.factorized_tm_forward(
+            lit_words, votes, schedule,
+            block_s=block_s or _term_infer_kernel.DEFAULT_BLOCK_S,
+            interpret=interpret,
+        )
+    Cp = schedule.clause_chain.shape[0]
+    vts = jnp.pad(votes.astype(jnp.int32), ((0, Cp - votes.shape[0]), (0, 0)))
+    return _term_infer_kernel.factorized_class_sums_ref(
+        lit_words, jnp.asarray(schedule.term_chain),
+        jnp.asarray(schedule.clause_chain), vts,
+    )
 
 
 # ---------------------------------------------------------------------------

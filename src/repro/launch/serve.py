@@ -29,28 +29,63 @@ def serve_tm(args) -> None:
     the fused single-pass inference kernel; ``--autotune`` picks its block
     sizes from the cached sweep (kernels/autotune.py).
     """
+    import os
+
     from repro.configs.matador_tm import TM_CONFIGS
     from repro.core import compiler, packetizer, tm, train
     from repro.data import make_boolean_classification
     from repro.kernels import ops
 
     config = TM_CONFIGS[args.arch]
-    X, y = make_boolean_classification(
-        args.n_train, config.n_features, config.n_classes, seed=0
-    )
-    state = tm.init(config, jax.random.PRNGKey(0))
-    state = train.fit(
-        config, state, jnp.asarray(X), jnp.asarray(y),
-        epochs=args.epochs, batch_size=64, rng=jax.random.PRNGKey(1),
-    )
-    compiled = compiler.compile_tm(config, state.ta_state)
+    if args.artifact and not args.artifact.endswith(".npz"):
+        # np.savez_compressed appends .npz — normalize up front so the
+        # load check looks for the file save() actually wrote
+        args.artifact += ".npz"
+    trained_this_run = False
+    if args.artifact and os.path.exists(args.artifact):
+        # cold-start fast path: the artifact ships its execution schedules
+        # AND the tilings recorded by a previous --autotune run, so neither
+        # the training loop nor the sweep is re-paid
+        compiled = compiler.CompiledTM.load(args.artifact)
+        if (compiled.n_features != config.n_features
+                or compiled.n_classes != config.n_classes):
+            # a mismatched artifact would serve silently wrong predictions
+            # (out-of-range word gathers clamp instead of failing)
+            raise SystemExit(
+                f"artifact {args.artifact} was compiled for "
+                f"F={compiled.n_features}/K={compiled.n_classes}, but "
+                f"--arch {args.arch} is F={config.n_features}/"
+                f"K={config.n_classes}")
+        print(f"loaded artifact {args.artifact} "
+              f"(U={compiled.n_unique}, tuned={sorted(compiled.tuned)})")
+    else:
+        X, y = make_boolean_classification(
+            args.n_train, config.n_features, config.n_classes, seed=0
+        )
+        state = tm.init(config, jax.random.PRNGKey(0))
+        state = train.fit(
+            config, state, jnp.asarray(X), jnp.asarray(y),
+            epochs=args.epochs, batch_size=64, rng=jax.random.PRNGKey(1),
+        )
+        compiled = compiler.compile_tm(config, state.ta_state)
+        trained_this_run = True
+    tuned_at_start = dict(compiled.tuned)
     print("compile stats:", compiled.stats.as_dict())
 
     bucket = args.bucket
     use_kernel, interpret = ops.kernel_dispatch()
-    # kernel-path default: the block-sparse chain schedule (work scales
-    # with the artifact's include bits); --no-sparse pins the dense kernel
+    # kernel-path default: the chain-schedule kernels (work scales with the
+    # artifact's include structure); --no-sparse pins the dense kernel.
+    # Within the schedule path the FACTORIZED kernel serves when the
+    # artifact's measured term sharing clears the compile-time threshold
+    # (shared AND terms evaluated once per bucket); --no-factorize pins
+    # the flat bit-chain kernel.
     sparse = use_kernel and not args.no_sparse
+    factorize = (
+        sparse and not args.no_factorize
+        and compiled.stats.partial_term_sharing
+        >= compiler.FACTORIZE_SHARING_THRESHOLD
+    )
 
     def tuned_blocks(n_clauses):
         # autotune the shape the kernel ACTUALLY runs: per-shard C_loc on a
@@ -66,17 +101,53 @@ def serve_tm(args) -> None:
         print(f"autotuned dense blocks (C={n_clauses}):", blocks)
         return blocks
 
+    def _tuned_ctx(inc_rows):
+        # recorded tunings are keyed by (bucket, swept rows, backend/mode):
+        # a mesh run tunes a per-shard SLICE and an interpret-mode tiling
+        # must not answer for a compiled server
+        from repro.kernels import autotune
+
+        return dict(rows=inc_rows.shape[0],
+                    mode=autotune._mode_backend(interpret))
+
     def tuned_sparse_blocks(inc_rows):
         # the schedule tiling is swept on the rows the shard actually
-        # serves, under sparse_infer: cache keys (artifact-hashed)
+        # serves, under sparse_infer: cache keys (artifact-hashed); an
+        # artifact-recorded tiling (save()d by a previous run) short-
+        # circuits the sweep on cold starts
         if not (use_kernel and args.autotune):
             return {}
+        ctx = _tuned_ctx(inc_rows)
+        recorded = compiled.tuned_blocks("sparse_infer", bucket, **ctx)
+        if recorded is not None:
+            print("artifact-recorded sparse blocks:", recorded)
+            return recorded
         from repro.kernels import autotune
 
         blocks = autotune.autotune_sparse_infer_blocks(
             bucket, compiled.n_classes, inc_rows, interpret=interpret,
         )
+        compiled.record_tuned("sparse_infer", bucket, blocks, **ctx)
         print(f"autotuned sparse blocks (U={inc_rows.shape[0]}):", blocks)
+        return blocks
+
+    def tuned_factorized_blocks(inc_rows):
+        # term_infer: cache keys are artifact-hashed too (the stage-1/2
+        # work split is a property of the trained include structure)
+        if not (use_kernel and args.autotune):
+            return {}
+        ctx = _tuned_ctx(inc_rows)
+        recorded = compiled.tuned_blocks("term_infer", bucket, **ctx)
+        if recorded is not None:
+            print("artifact-recorded factorized blocks:", recorded)
+            return recorded
+        from repro.kernels import autotune
+
+        blocks = autotune.autotune_term_infer_blocks(
+            bucket, compiled.n_classes, inc_rows, interpret=interpret,
+        )
+        compiled.record_tuned("term_infer", bucket, blocks, **ctx)
+        print(f"autotuned factorized blocks (U={inc_rows.shape[0]}):", blocks)
         return blocks
 
     # donation recycles each bucket's literal buffer on accelerators
@@ -97,9 +168,45 @@ def serve_tm(args) -> None:
         U = compiled.n_unique
         if args.autotune:
             # ROADMAP "Next": seed the per-shard C_loc cache entries for
-            # BOTH kernels so later mesh runs skip the sweeps
+            # ALL kernels so later mesh runs skip the sweeps
             tuned_blocks(-(-U // n_model))
-        if sparse:
+        if factorize:
+            from repro.kernels import sparse_infer, term_infer
+
+            C_loc_est = sparse_infer._rup(-(-max(U, 1) // n_model), 8)
+            fblocks = tuned_factorized_blocks(
+                np.ascontiguousarray(compiled.include_words[:C_loc_est]))
+            schedules, term_stack, chain_stack, votes_stack, tile_stack, \
+                C_loc = term_infer.stack_shard_factorized(
+                    compiled.include_words, compiled.votes, n_model,
+                    block_c=fblocks.get(
+                        "block_c", term_infer.DEFAULT_BLOCK_C),
+                    block_j=fblocks.get(
+                        "block_j", term_infer.DEFAULT_BLOCK_J),
+                    block_t=fblocks.get(
+                        "block_t", term_infer.DEFAULT_BLOCK_T),
+                    term_w=fblocks.get("term_w"),
+                )
+            fwd = tm_sharding.sharded_factorized_forward_fn(
+                mesh,
+                block_t=schedules[0].block_t,
+                block_c=schedules[0].block_c, block_j=schedules[0].block_j,
+                block_s=fblocks.get("block_s"),
+            )
+            terms_sh = jnp.asarray(term_stack)
+            chains = jnp.asarray(chain_stack)
+            votes_sh = jnp.asarray(votes_stack)
+            tiles = jnp.asarray(tile_stack)
+            print(f"mesh {dict(mesh.shape)}: {C_loc * n_model} unique "
+                  f"clauses sharded over model={n_model} ({C_loc}/shard, "
+                  f"{tile_stack.shape[-1]} tiles/shard, "
+                  f"{term_stack.shape[1]} term rows/shard)")
+            run_bucket = jax.jit(
+                lambda xw: fwd(terms_sh, chains, votes_sh, tiles,
+                               xw[:, word_ids]).argmax(-1),
+                donate_argnums=donate,
+            )
+        elif sparse:
             from repro.kernels import sparse_infer
 
             C_loc_est = sparse_infer._rup(-(-max(U, 1) // n_model), 8)
@@ -151,13 +258,23 @@ def serve_tm(args) -> None:
                 donate_argnums=donate,
             )
     else:
-        blocks = (tuned_sparse_blocks(compiled.include_words) if sparse
-                  else tuned_blocks(compiled.n_unique))
+        if factorize:
+            blocks = tuned_factorized_blocks(compiled.include_words)
+        elif sparse:
+            blocks = tuned_sparse_blocks(compiled.include_words)
+        else:
+            blocks = tuned_blocks(compiled.n_unique)
         run_bucket = jax.jit(
             lambda xw: compiler.run_compiled(
-                compiled, xw, sparse=sparse, **blocks).argmax(-1),
+                compiled, xw, sparse=sparse, factorize=factorize,
+                **blocks).argmax(-1),
             donate_argnums=donate,
         )
+    if args.artifact and (trained_this_run or compiled.tuned != tuned_at_start):
+        # persist schedules + newly recorded tunings for cold starts; a
+        # pure load with nothing new recorded skips the multi-MB rewrite
+        compiled.save(args.artifact)
+        print(f"saved artifact (schedules + tuned tilings) to {args.artifact}")
 
     Xr, _ = make_boolean_classification(
         args.requests, config.n_features, config.n_classes, seed=2
@@ -177,7 +294,8 @@ def serve_tm(args) -> None:
         o.block_until_ready()
     dt = time.perf_counter() - t0
     preds = np.concatenate([np.asarray(o) for o in outs])[:n]
-    path = ("sparse-schedule" if sparse else "fused-kernel") \
+    path = ("factorized-schedule" if factorize else
+            "sparse-schedule" if sparse else "fused-kernel") \
         if use_kernel else "oracle"
     if args.mesh:
         path = f"clause-sharded {path} ({args.mesh})"
@@ -240,6 +358,14 @@ def main() -> None:
                     help="TM kernel path: serve the compiled artifact with "
                          "the dense fused kernel instead of the default "
                          "block-sparse chain schedule")
+    ap.add_argument("--no-factorize", action="store_true",
+                    help="TM kernel path: pin the flat bit-chain sparse "
+                         "kernel even when the artifact's partial_term_"
+                         "sharing clears the factorized-serving threshold")
+    ap.add_argument("--artifact", default=None,
+                    help="TM: compiled-artifact .npz path — loaded instead "
+                         "of train+compile when it exists, (re)saved with "
+                         "schedules + autotuned tilings after serving")
     ap.add_argument("--mesh", default=None,
                     help="TM: mesh spec, e.g. 'model=4' — shard the compiled "
                          "clause bank over the mesh (fused kernel per shard, "

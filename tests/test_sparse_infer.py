@@ -58,8 +58,11 @@ def _check_schedule_equals_dense(n_features, n_classes, cpc, density, seed,
     dense = tm.class_sums(cfg, jnp.asarray(ta), tm.literals(x),
                           training=False)
     xp = packetizer.pack_literals(x)
+    # factorize=False: these tests exist to cover the flat bit-chain
+    # kernel; the PR-5 heuristic would route high-sharing random banks to
+    # the factorized kernel and quietly drop that coverage
     sp = compiler.run_compiled(comp, xp, use_kernel=True, interpret=True,
-                               sparse=True)
+                               sparse=True, factorize=False)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
 
 
@@ -136,7 +139,8 @@ def _check_schedule_equals_dense_state(cfg, ta, batch, seed):
     dense = tm.class_sums(cfg, jnp.asarray(ta), tm.literals(x),
                           training=False)
     sp = compiler.run_compiled(comp, packetizer.pack_literals(x),
-                               use_kernel=True, interpret=True)
+                               use_kernel=True, interpret=True,
+                               factorize=False)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
 
 
