@@ -24,6 +24,23 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.runtime import faults
+
+
+def _step_of(name: str) -> Optional[int]:
+    """Parse a ``step_<n>`` directory name; None for tmp/malformed entries.
+
+    A killed writer can leave ``step_*.tmp`` debris and a stray file can
+    share the prefix — neither may crash ``latest_step``/``_gc`` with an
+    ``int()`` ValueError.
+    """
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
+
 
 def _flatten(tree) -> dict:
     flat = {}
@@ -35,6 +52,7 @@ def _flatten(tree) -> dict:
 
 def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
     """Atomic synchronous save; returns the final checkpoint path."""
+    faults.raise_if("ckpt.write_fail")
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -58,11 +76,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[dict] 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    ]
+    steps = [s for s in map(_step_of, os.listdir(directory)) if s is not None]
     return max(steps) if steps else None
 
 
@@ -114,18 +128,34 @@ def load_checkpoint(
 
 
 class CheckpointManager:
-    """Async writer + retention policy around save/load."""
+    """Async writer + retention policy around save/load.
+
+    A failed background write is never swallowed: the exception is captured
+    in the writer thread and re-raised on the next ``wait()`` (which
+    ``save()`` calls first) — a training loop cannot keep running for hours
+    believing its checkpoints are landing when the disk is full.
+    """
 
     def __init__(self, directory: str, max_to_keep: int = 3):
         self.directory = directory
         self.max_to_keep = max_to_keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
+        # a writer killed mid-save leaves a step_*.tmp dir; it is garbage
+        # (the atomic rename never happened) and would otherwise accumulate
+        for d in os.listdir(directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
     def wait(self) -> None:
+        """Join the async writer; re-raise its failure if it died."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def save(self, step: int, tree: Any, extra: Optional[dict] = None,
              blocking: bool = True) -> None:
@@ -133,11 +163,15 @@ class CheckpointManager:
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # device->host
 
         def work():
-            save_checkpoint(self.directory, step, host_tree, extra)
-            self._gc()
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced by the next wait()/save()
+                self._error = e
 
         if blocking:
             work()
+            self.wait()
         else:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
@@ -152,9 +186,9 @@ class CheckpointManager:
 
     def _gc(self) -> None:
         steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp")
+            s for s in map(_step_of, os.listdir(self.directory))
+            if s is not None
         )
         for s in steps[: -self.max_to_keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"))
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)

@@ -24,7 +24,14 @@ TM_KWS6 = TMConfig(n_features=377, n_classes=6, clauses_per_class=300,
 TM_EDGE_XL = TMConfig(n_features=4096, n_classes=32, clauses_per_class=2048,
                       threshold=400, s=10.0, clause_pad_multiple=256)
 
+# Drill-sized TM for fault-tolerance exercises (tests, CI): synthetic data
+# (non-paper name), seconds to train, small enough that every engine on the
+# serve ladder traces quickly.
+TM_TINY = TMConfig(n_features=32, n_classes=3, clauses_per_class=8,
+                   threshold=8, s=4.0)
+
 TM_CONFIGS = {
     "tm-mnist": TM_MNIST, "tm-kmnist": TM_KMNIST, "tm-fmnist": TM_FMNIST,
     "tm-cifar2": TM_CIFAR2, "tm-kws6": TM_KWS6, "tm-edge-xl": TM_EDGE_XL,
+    "tm-tiny": TM_TINY,
 }

@@ -41,19 +41,57 @@ properties).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
+import os
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packetizer, tm
+from repro.runtime import faults
 
 # kernel-path default: serve the factorized (two-level) schedule when at
 # least this fraction of the artifact's per-word AND terms are absorbed by
 # sub-clause sharing — below it the term table amortizes too little stage-1
 # work to beat the flat bit-chain kernel
 FACTORIZE_SHARING_THRESHOLD = 0.30
+
+# On-disk artifact schema.  Version 1 added the integrity envelope (schema
+# tag + content checksum, saved atomically); version-0 artifacts (no tag)
+# predate it and are REJECTED at load — an unverifiable artifact must be
+# recompiled, not served on trust.
+ARTIFACT_SCHEMA_VERSION = 1
+
+
+class ArtifactError(RuntimeError):
+    """A compiled artifact failed integrity verification at load.
+
+    Raised for unreadable/truncated files, schema-version mismatches,
+    content-checksum mismatches (bit-rot, partial writes), and schedule
+    invariant violations.  The serve path treats this as fatal: a corrupt
+    artifact must never serve silently-wrong predictions (out-of-range
+    word gathers clamp instead of failing).
+    """
+
+
+def _artifact_checksum(arrays: dict, meta: dict) -> str:
+    """Content hash over every artifact array + the meta (sans checksum).
+
+    Arrays hash (name, dtype, shape, bytes) in sorted-name order; the meta
+    dict hashes as canonical JSON, so save() and load() agree byte-for-byte
+    on the same content.
+    """
+    h = hashlib.sha256()
+    for key in sorted(arrays):
+        a = np.ascontiguousarray(arrays[key])
+        h.update(key.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    h.update(json.dumps(meta, sort_keys=True).encode())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass
@@ -215,16 +253,26 @@ class CompiledTM:
         blocks = self.tuned.get(self._tuned_key(kernel, bucket, rows, mode))
         return dict(blocks) if blocks is not None else None
 
-    def save(self, path: str) -> None:
-        # the default-tiling schedules ship inside the artifact (the
-        # "bitstream" carries its execution schedules); other tilings are
-        # rebuilt on demand from the include rows.  Autotuned tilings
-        # recorded via record_tuned() ride in the meta JSON, so a server
-        # cold-starting from this file skips the sweep entirely.
+    def save(self, path: str) -> str:
+        """Write the artifact atomically with an integrity envelope.
+
+        The default-tiling schedules ship inside the artifact (the
+        "bitstream" carries its execution schedules); other tilings are
+        rebuilt on demand from the include rows.  Autotuned tilings
+        recorded via record_tuned() ride in the meta JSON, so a server
+        cold-starting from this file skips the sweep entirely.
+
+        Integrity: the meta carries ``ARTIFACT_SCHEMA_VERSION`` and a
+        sha256 content checksum over every array + the meta itself, and
+        the file is written to a tmp path then ``os.replace``d — a SIGTERM
+        mid-save can never truncate the artifact the next run will load,
+        and ``load()`` rejects any byte that rotted after the replace.
+        Returns the final path (``.npz`` is appended when missing, the
+        same normalization ``np.savez`` applies).
+        """
         sched = self.default_schedule
         fsched = self.default_factorized_schedule
-        np.savez_compressed(
-            path,
+        arrays = dict(
             include_words=self.include_words,
             word_ids=self.word_ids,
             votes=self.votes,
@@ -244,36 +292,75 @@ class CompiledTM:
                 fsched.tile_jb, fsched.tile_first, fsched.tile_last])
             if fsched.n_tiles else np.zeros((6, 0), np.int32),
             fsched_counts=fsched.counts,
-            meta=np.frombuffer(
-                json.dumps(
-                    dict(
-                        n_features=self.n_features,
-                        n_classes=self.n_classes,
-                        stats=self.stats.as_dict(),
-                        schedule=dict(block_c=sched.block_c,
-                                      block_j=sched.block_j,
-                                      n_rows=sched.n_rows,
-                                      n_lit_bits=sched.n_lit_bits),
-                        fschedule=dict(block_c=fsched.block_c,
-                                       block_j=fsched.block_j,
-                                       block_t=fsched.block_t,
-                                       term_w=fsched.term_w,
-                                       n_rows=fsched.n_rows,
-                                       n_terms=fsched.n_terms,
-                                       n_lit_bits=fsched.n_lit_bits),
-                        tuned=self.tuned,
-                    )
-                ).encode(),
-                dtype=np.uint8,
-            ),
         )
+        meta = dict(
+            schema=ARTIFACT_SCHEMA_VERSION,
+            n_features=self.n_features,
+            n_classes=self.n_classes,
+            stats=self.stats.as_dict(),
+            schedule=dict(block_c=sched.block_c,
+                          block_j=sched.block_j,
+                          n_rows=sched.n_rows,
+                          n_lit_bits=sched.n_lit_bits),
+            fschedule=dict(block_c=fsched.block_c,
+                           block_j=fsched.block_j,
+                           block_t=fsched.block_t,
+                           term_w=fsched.term_w,
+                           n_rows=fsched.n_rows,
+                           n_terms=fsched.n_terms,
+                           n_lit_bits=fsched.n_lit_bits),
+            tuned=self.tuned,
+        )
+        meta["checksum"] = _artifact_checksum(arrays, meta)
+        final = path if path.endswith(".npz") else path + ".npz"
+        tmp = f"{final}.tmp-{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez_compressed(
+                    f,
+                    meta=np.frombuffer(json.dumps(meta).encode(), np.uint8),
+                    **arrays,
+                )
+                f.flush()
+                os.fsync(f.fileno())
+            faults.raise_if("artifact.save_abort")
+            os.replace(tmp, final)
+        finally:
+            if os.path.exists(tmp):       # failed save leaves no debris
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+        faults.corrupt_if("artifact.bitflip", final)
+        return final
 
     @staticmethod
     def load(path: str) -> "CompiledTM":
+        """Load and VERIFY an artifact; raise :class:`ArtifactError` rather
+        than ever returning one that could serve wrong predictions."""
         from repro.kernels import sparse_infer, term_infer
 
-        z = np.load(path)
-        meta = json.loads(bytes(z["meta"]).decode())
+        try:
+            z = np.load(path)
+            meta = json.loads(bytes(z["meta"]).decode())
+            arrays = {k: z[k] for k in z.files if k != "meta"}
+        except Exception as e:
+            raise ArtifactError(
+                f"artifact {path} is unreadable (truncated or not a "
+                f"compiled artifact): {type(e).__name__}: {e}") from e
+        schema = meta.get("schema", 0)
+        if schema != ARTIFACT_SCHEMA_VERSION:
+            raise ArtifactError(
+                f"artifact {path} has schema version {schema}; this runtime "
+                f"requires {ARTIFACT_SCHEMA_VERSION} — recompile the model "
+                "(compile_tm + save) instead of serving a stale artifact")
+        recorded = meta.pop("checksum", None)
+        recomputed = _artifact_checksum(arrays, meta)
+        if recorded != recomputed:
+            raise ArtifactError(
+                f"artifact {path} failed its content checksum (recorded "
+                f"{recorded}, recomputed {recomputed}) — the file is corrupt "
+                "(bit-rot or a partial write); refusing to serve it")
         st = meta["stats"]
         stats = CompileStats(
             **{k: st[k] for k in (
@@ -336,7 +423,85 @@ class CompiledTM:
                 )
             )
         compiled.tuned.update(meta.get("tuned", {}))
+        validate_artifact(compiled)
         return compiled
+
+
+def validate_artifact(compiled: CompiledTM) -> None:
+    """Structural invariant checks on an artifact and its shipped schedules.
+
+    A second verification layer behind the checksum: the checksum catches
+    bytes that changed after ``save()``, this catches an artifact that was
+    *written* wrong (a buggy or adversarial producer) — out-of-range chain
+    or term ids would otherwise gather-clamp into silently wrong class
+    sums.  Raises :class:`ArtifactError` on the first violation.
+    """
+
+    def fail(msg: str):
+        raise ArtifactError(f"artifact invariant violated: {msg}")
+
+    inc, votes, wid = compiled.include_words, compiled.votes, compiled.word_ids
+    if inc.ndim != 2:
+        fail(f"include_words must be 2-D, got shape {inc.shape}")
+    U, Wa = inc.shape
+    if votes.shape != (U, compiled.n_classes):
+        fail(f"votes shape {votes.shape} != ({U}, {compiled.n_classes})")
+    if wid.shape != (Wa,):
+        fail(f"word_ids shape {wid.shape} != ({Wa},)")
+    if Wa and (int(wid[0]) < 0 or (Wa > 1 and np.any(np.diff(wid) <= 0))):
+        fail("word_ids must be non-negative and strictly increasing")
+    n_dense = compiled.stats.n_words_dense
+    if n_dense and Wa and int(wid[-1]) >= n_dense:
+        fail(f"word_ids reach {int(wid[-1])} but the dense model has only "
+             f"{n_dense} words — gathers would clamp")
+
+    def check_tiles(tag, counts, indptr, n_tiles, tile_cb):
+        if indptr.shape[0] != counts.shape[0] + 1 or (indptr.size and indptr[0] != 0):
+            fail(f"{tag}: indptr shape/origin inconsistent with counts")
+        if np.any(counts < 0) or np.any(np.diff(indptr) != counts):
+            fail(f"{tag}: tile indptr is not the monotone prefix sum of counts")
+        if int(counts.sum()) > n_tiles:
+            fail(f"{tag}: counts claim {int(counts.sum())} tiles but the "
+                 f"tile table has {n_tiles}")
+        if n_tiles and (np.any(tile_cb < 0) or np.any(tile_cb >= counts.shape[0])):
+            fail(f"{tag}: tile clause-block ids out of range")
+
+    for s in compiled._schedules.values():
+        if s.n_rows != U:
+            fail(f"chain schedule covers {s.n_rows} rows, artifact has {U}")
+        if s.n_lit_bits != 32 * Wa:
+            fail(f"chain schedule n_lit_bits {s.n_lit_bits} != 32*{Wa}")
+        if np.any(s.chain_ids < 0) or np.any(s.chain_ids > s.n_lit_bits):
+            fail("chain ids out of range (sentinel is the maximum legal id)")
+        if s.chain_ids.shape[0] > s.n_rows and not np.all(
+                s.chain_ids[s.n_rows:] == s.n_lit_bits):
+            fail("padded chain rows past n_rows must be all-sentinel")
+        check_tiles("chain schedule", s.counts, s.indptr, s.n_tiles, s.tile_cb)
+
+    for fs in compiled._fschedules.values():
+        if fs.n_rows != U:
+            fail(f"factorized schedule covers {fs.n_rows} rows, artifact has {U}")
+        if fs.n_lit_bits != 32 * Wa:
+            fail(f"factorized schedule n_lit_bits {fs.n_lit_bits} != 32*{Wa}")
+        if np.any(fs.term_chain < 0) or np.any(fs.term_chain > fs.n_lit_bits):
+            fail("term-chain literal ids out of range")
+        if np.any(fs.clause_chain < 0) or np.any(fs.clause_chain > fs.n_terms):
+            fail("clause-chain term ids out of range (sentinel == n_terms)")
+        if fs.clause_chain.shape[0] > fs.n_rows and not np.all(
+                fs.clause_chain[fs.n_rows:] == fs.n_terms):
+            fail("padded clause-chain rows past n_rows must be all-sentinel")
+        if fs.term_chain.shape[0] > fs.n_terms and not np.all(
+                fs.term_chain[fs.n_terms:] == fs.n_lit_bits):
+            fail("padded term rows past n_terms must be all-sentinel")
+        if fs.term_word.shape[0] != fs.n_terms or fs.term_val.shape[0] != fs.n_terms:
+            fail("term table length != n_terms")
+        if fs.n_terms and (np.any(fs.term_word < 0) or np.any(fs.term_word >= Wa)):
+            fail("term active-word indices out of range")
+        if np.any((fs.tile_stage != 0) & (fs.tile_stage != 1)):
+            fail("tile_stage entries must be 0 (term) or 1 (clause)")
+        n_ctiles = int((fs.tile_stage == 1).sum())
+        check_tiles("factorized schedule", fs.counts, fs.indptr, n_ctiles,
+                    fs.tile_cb[fs.tile_stage == 1] if fs.n_tiles else fs.tile_cb)
 
 
 def compile_tm(

@@ -85,6 +85,10 @@ def fit(
     engine: str = "jnp",
     batch_chunk: int | None = None,
     mesh=None,
+    ckpt_manager=None,
+    ckpt_every: int = 0,
+    preemption=None,
+    monitor=None,
 ) -> tm.TMState:
     """Simple host loop used by examples/tests (the GUI "Train" button).
 
@@ -105,7 +109,23 @@ def fit(
     sharded over ``model``, batch over the data axes.  The shuffle stream
     and per-step seeds are unchanged, and the sharded step is bit-identical
     to the single-device one, so ``fit`` results do not depend on the mesh.
+
+    **Fault tolerance** — ``ckpt_manager`` (a ``CheckpointManager``) with
+    ``ckpt_every > 0`` checkpoints the TA state, the (epoch, step-in-epoch)
+    cursor, and the EPOCH-START rng key at step boundaries, and auto-resumes
+    from the newest checkpoint when the directory already holds one.
+    Resume is *bit-exact*: the epoch's shuffle permutation is re-derived
+    from the saved epoch key and the per-step rng splits already consumed
+    are replayed, so an interrupted-then-resumed run produces exactly the
+    TA state of an uninterrupted one (drilled in
+    tests/test_fault_tolerance.py).  ``preemption`` (a ``PreemptionHandler``)
+    turns SIGTERM into checkpoint + ``sys.exit(RESUME_EXIT_CODE)`` at the
+    next step boundary; ``monitor`` (a ``StragglerMonitor``) flags slow
+    steps.  Fault-injection sites (``runtime/faults.py``): ``train.sigterm``
+    and ``train.slow_step``, keyed by the global step index.
     """
+    from repro.runtime import faults
+
     sharded_step = None
     if mesh is not None:
         if engine != "kernel":
@@ -119,11 +139,35 @@ def fit(
     n = x.shape[0]
     steps_per_epoch = max(1, n // batch_size)
     gstep = 0
-    for ep in range(epochs):
+    start_epoch = start_step = 0
+    if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
+        restored, extra = ckpt_manager.restore(
+            {"ta": state.ta_state, "rng": rng})
+        rng = jnp.asarray(restored["rng"], jnp.uint32)   # epoch-start key
+        start_epoch = int(extra["epoch"])
+        start_step = int(extra["step_in_epoch"])
+        gstep = int(extra["gstep"])
+        state = tm.TMState(ta_state=restored["ta"], steps=jnp.int32(gstep))
+        print(f"fit: resumed at epoch {start_epoch} step {start_step} "
+              f"(global step {gstep})")
+
+    def save_ckpt(ep, next_step, rng_epoch, blocking=True):
+        ckpt_manager.save(
+            gstep, {"ta": state.ta_state, "rng": rng_epoch},
+            extra={"epoch": ep, "step_in_epoch": next_step, "gstep": gstep},
+            blocking=blocking)
+
+    for ep in range(start_epoch, epochs):
+        rng_epoch = rng                  # resume anchor: key at epoch start
         rng, rp = jax.random.split(rng)
         perm = jax.random.permutation(rp, n)
         xs, ys = x[perm], y[perm]        # one device-side shuffle per epoch
-        for i in range(steps_per_epoch):
+        i0 = start_step if ep == start_epoch else 0
+        for _ in range(i0):              # replay consumed per-step splits
+            rng, _ = jax.random.split(rng)
+        for i in range(i0, steps_per_epoch):
+            if monitor is not None:
+                monitor.start_step()
             xb = xs[i * batch_size : (i + 1) * batch_size]
             yb = ys[i * batch_size : (i + 1) * batch_size]
             rng, rs = jax.random.split(rng)
@@ -137,8 +181,24 @@ def fit(
                 )
             else:
                 state, _ = train_step(config, state, xb, yb, rs)
+            faults.sleep_if("train.slow_step", step=gstep)
             gstep += 1
+            if monitor is not None:
+                flag = monitor.end_step(gstep - 1)
+                if flag:
+                    print(f"fit: straggler flagged: {flag}")
+            if (ckpt_manager is not None and ckpt_every
+                    and gstep % ckpt_every == 0):
+                save_ckpt(ep, i + 1, rng_epoch, blocking=False)
+            faults.sigterm_if("train.sigterm", step=gstep - 1)
+            if preemption is not None and preemption.preempted:
+                print("fit: preempted — checkpointing and exiting for resume")
+                preemption.checkpoint_and_exit(
+                    (lambda: save_ckpt(ep, i + 1, rng_epoch))
+                    if ckpt_manager is not None else (lambda: None))
         if log_every and (ep + 1) % log_every == 0 and x_val is not None:
             acc = eval_step(config, state, x_val, y_val)
             print(f"epoch {ep + 1}: val_acc={float(acc):.4f}")
+    if ckpt_manager is not None:
+        ckpt_manager.wait()              # surface any pending async failure
     return state

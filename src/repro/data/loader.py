@@ -40,9 +40,18 @@ class ShardedBatcher:
         self.prefetch = prefetch
         self.epoch = 0
         self.step_in_epoch = 0
+        self._consumed: Optional[dict] = None
 
     # -- checkpointable state -------------------------------------------------
     def state_dict(self) -> dict:
+        # the prefetch worker advances (epoch, step_in_epoch) up to
+        # ``prefetch`` batches AHEAD of the training loop — checkpointing
+        # that cursor would skip batches on resume.  The iterator therefore
+        # tags every batch with its post-consumption cursor and records it
+        # when the batch is actually handed to the caller; state_dict
+        # returns that CONSUMED position.
+        if self._consumed is not None:
+            return dict(self._consumed)
         return {"epoch": self.epoch, "step_in_epoch": self.step_in_epoch,
                 "seed": self.seed}
 
@@ -50,6 +59,7 @@ class ShardedBatcher:
         self.epoch = st["epoch"]
         self.step_in_epoch = st["step_in_epoch"]
         self.seed = st["seed"]
+        self._consumed = None
 
     # -- iteration -------------------------------------------------------------
     def _epoch_order(self, epoch: int) -> np.ndarray:
@@ -61,6 +71,8 @@ class ShardedBatcher:
         return order[self.process_index :: self.process_count]
 
     def _batches(self) -> Iterator[tuple]:
+        # yields (consumed_state, batch): the state a checkpoint must
+        # record once this batch has been handed to the training loop
         while True:
             order = self._epoch_order(self.epoch)
             nb = len(order) // self.batch_size
@@ -68,27 +80,34 @@ class ShardedBatcher:
                 i = self.step_in_epoch
                 idx = order[i * self.batch_size : (i + 1) * self.batch_size]
                 self.step_in_epoch += 1
-                yield tuple(a[idx] for a in self.arrays)
+                state = {"epoch": self.epoch,
+                         "step_in_epoch": self.step_in_epoch,
+                         "seed": self.seed}
+                yield state, tuple(a[idx] for a in self.arrays)
             self.epoch += 1
             self.step_in_epoch = 0
 
     def __iter__(self):
         if self.prefetch <= 0:
-            yield from self._batches()
+            for state, b in self._batches():
+                self._consumed = state
+                yield b
             return
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
 
         def worker():
-            for b in self._batches():
+            for item in self._batches():
                 if stop.is_set():
                     return
-                q.put(b)
+                q.put(item)
 
         t = threading.Thread(target=worker, daemon=True)
         t.start()
         try:
             while True:
-                yield q.get()
+                state, b = q.get()
+                self._consumed = state
+                yield b
         finally:
             stop.set()

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import jax_compat
+from repro.runtime import faults
 
 from repro.kernels import class_sum as _class_sum_kernel
 from repro.kernels import clause_eval as _clause_eval_kernel
@@ -44,6 +45,71 @@ def kernel_dispatch(use_kernel=None, interpret=None):
     """Public resolver for callers that branch on the dispatch decision
     (serve loop, compiled-artifact runner): (use_kernel, interpret)."""
     return _resolve(use_kernel, interpret)
+
+
+class EngineLadder:
+    """Degradation ladder over inference engines (serve fault tolerance).
+
+    ``engines`` is an ordered ``[(name, builder)]`` list, preferred engine
+    first; ``builder()`` returns the engine's callable and is invoked
+    lazily, so engines the ladder never reaches pay neither their jit
+    trace nor their autotune sweep.  :meth:`run` executes the current
+    engine on a *fresh* input from ``make_input`` (re-invoked per attempt
+    so a retry never reuses a buffer a failed call may already have
+    donated), blocks until the result is ready so asynchronous failures
+    surface here, and on ANY exception — a Mosaic lowering error on a real
+    backend, an injected fault in a drill — demotes one level and retries
+    the same input.  Only the LAST engine's failure propagates: the run
+    degrades instead of crashing.  ``counts``/``demotions`` feed the serve
+    health summary (which engine actually served each bucket).
+    """
+
+    def __init__(self, engines):
+        self._names = [name for name, _ in engines]
+        self._builders = dict(engines)
+        self._built: dict = {}
+        self._level = 0
+        self.counts = {name: 0 for name in self._names}
+        self.demotions: list = []
+
+    @property
+    def engine(self) -> str:
+        """Name of the engine currently serving."""
+        return self._names[self._level]
+
+    @property
+    def exhausted(self) -> bool:
+        return self._level + 1 >= len(self._names)
+
+    def demote(self, reason: str, bucket=None) -> bool:
+        """Drop one level (False when already on the last engine)."""
+        if self.exhausted:
+            print(f"engine ladder exhausted at {self.engine!r}; cannot "
+                  f"demote further ({reason})")
+            return False
+        frm, to = self._names[self._level], self._names[self._level + 1]
+        self.demotions.append(
+            dict(frm=frm, to=to, bucket=bucket, reason=reason))
+        print(f"engine demoted: {frm} -> {to} (bucket {bucket}): {reason}")
+        self._level += 1
+        return True
+
+    def run(self, make_input, bucket=None, count=True):
+        """Run the current engine on ``make_input()``, demoting on failure."""
+        while True:
+            name = self.engine
+            try:
+                fn = self._built.get(name)
+                if fn is None:
+                    fn = self._built[name] = self._builders[name]()
+                out = jax.block_until_ready(fn(make_input()))
+            except Exception as e:  # noqa: BLE001 — any engine failure demotes
+                if not self.demote(f"{type(e).__name__}: {e}", bucket=bucket):
+                    raise
+                continue
+            if count:
+                self.counts[name] += 1
+            return out
 
 
 def clause_fire(
@@ -139,6 +205,7 @@ def tm_forward_packed(
     """
     use_kernel, interpret = _resolve(use_kernel, interpret)
     if use_kernel and fuse:
+        faults.raise_if("kernel.dense")   # drill: dense-kernel lowering failure
         if autotune and not blocks:
             from repro.kernels import autotune as _autotune
 
@@ -184,6 +251,7 @@ def tm_forward_schedule(
     """
     use_kernel, interpret = _resolve(use_kernel, interpret)
     if use_kernel:
+        faults.raise_if("kernel.sparse")  # drill: chain-kernel lowering failure
         if schedule is None:
             import numpy as np
 
@@ -242,6 +310,10 @@ def tm_forward_factorized(
     import numpy as np
 
     use_kernel, interpret = _resolve(use_kernel, interpret)
+    if use_kernel:
+        # drill: factorized-kernel lowering failure (fires before the
+        # schedule build so a demoted serve never pays it either)
+        faults.raise_if("kernel.factorized")
     if schedule is None:
         inc_np = np.asarray(include_words)
         if (use_kernel and autotune and not blocks and block_s is None):

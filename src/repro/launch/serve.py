@@ -20,21 +20,36 @@ import numpy as np
 
 
 def serve_tm(args) -> None:
-    """Chunked streaming TM serve loop.
+    """Chunked streaming TM serve loop with an engine degradation ladder.
 
     Requests stream through fixed-size buckets of ``--bucket`` datapoints:
     one jit trace (bucket-shaped input, donated on accelerators) serves any
     request count — the last bucket is zero-padded, never retraced.  With
     the kernel path active (``REPRO_USE_PALLAS=1`` / TPU) each bucket runs
-    the fused single-pass inference kernel; ``--autotune`` picks its block
-    sizes from the cached sweep (kernels/autotune.py).
+    the schedule/fused kernels; ``--autotune`` picks block sizes from the
+    cached sweep (kernels/autotune.py).
+
+    **Fault tolerance** — each bucket runs through an
+    ``ops.EngineLadder`` (factorized -> sparse -> dense-fused -> XLA
+    oracle; a ``--mesh`` engine sits on top and degrades to the unsharded
+    ladder): a guarded warm probe catches kernel/lowering failures before
+    the request stream starts, any per-bucket failure demotes one engine
+    and retries that bucket, and ``--bucket-deadline N`` additionally
+    demotes when a bucket runs longer than ``N x`` the ``StragglerMonitor``
+    EWMA of bucket wall-times.  The run ends with a machine-readable
+    ``SERVE_HEALTH`` JSON line reporting which engine served each bucket,
+    every demotion, and straggler flags.  Buckets are executed
+    synchronously (blocked per bucket) so failures and deadlines attribute
+    to the bucket that caused them.
     """
+    import json
     import os
 
     from repro.configs.matador_tm import TM_CONFIGS
     from repro.core import compiler, packetizer, tm, train
     from repro.data import make_boolean_classification
     from repro.kernels import ops
+    from repro.runtime import StragglerMonitor, faults
 
     config = TM_CONFIGS[args.arch]
     if args.artifact and not args.artifact.endswith(".npz"):
@@ -45,8 +60,13 @@ def serve_tm(args) -> None:
     if args.artifact and os.path.exists(args.artifact):
         # cold-start fast path: the artifact ships its execution schedules
         # AND the tilings recorded by a previous --autotune run, so neither
-        # the training loop nor the sweep is re-paid
-        compiled = compiler.CompiledTM.load(args.artifact)
+        # the training loop nor the sweep is re-paid.  load() verifies
+        # schema, checksum, and schedule invariants — a corrupt or stale
+        # artifact is rejected here instead of serving wrong predictions.
+        try:
+            compiled = compiler.CompiledTM.load(args.artifact)
+        except compiler.ArtifactError as e:
+            raise SystemExit(f"refusing to serve: {e}")
         if (compiled.n_features != config.n_features
                 or compiled.n_classes != config.n_classes):
             # a mismatched artifact would serve silently wrong predictions
@@ -79,11 +99,14 @@ def serve_tm(args) -> None:
     # Within the schedule path the FACTORIZED kernel serves when the
     # artifact's measured term sharing clears the compile-time threshold
     # (shared AND terms evaluated once per bucket); --no-factorize pins
-    # the flat bit-chain kernel.
+    # the flat bit-chain kernel, --factorize pins the factorized one
+    # regardless of the measured sharing.
+    if args.factorize and args.no_factorize:
+        raise SystemExit("--factorize and --no-factorize are exclusive")
     sparse = use_kernel and not args.no_sparse
-    factorize = (
-        sparse and not args.no_factorize
-        and compiled.stats.partial_term_sharing
+    factorize = sparse and not args.no_factorize and (
+        args.factorize
+        or compiled.stats.partial_term_sharing
         >= compiler.FACTORIZE_SHARING_THRESHOLD
     )
 
@@ -153,7 +176,8 @@ def serve_tm(args) -> None:
     # donation recycles each bucket's literal buffer on accelerators
     donate = (0,) if jax.default_backend() != "cpu" else ()
     word_ids = jnp.asarray(compiled.word_ids)
-    if args.mesh:
+
+    def build_mesh():
         # clause-sharded serve: the compiled artifact's unique-clause bank
         # splits over `model` (banks bigger than one core's VMEM), each
         # shard runs the fused kernel on its local bank — carrying its own
@@ -257,24 +281,55 @@ def serve_tm(args) -> None:
                                xw[:, word_ids]).argmax(-1),
                 donate_argnums=donate,
             )
-    else:
-        if factorize:
+        return run_bucket
+
+    def build_engine(name):
+        # lazy per-level builders: engines the ladder never reaches pay
+        # neither their jit trace nor their autotune sweep
+        if name.startswith("mesh"):
+            return build_mesh()
+        if name == "factorized":
             blocks = tuned_factorized_blocks(compiled.include_words)
-        elif sparse:
+            return jax.jit(
+                lambda xw: compiler.run_compiled(
+                    compiled, xw, sparse=True, factorize=True,
+                    **blocks).argmax(-1),
+                donate_argnums=donate)
+        if name == "sparse":
             blocks = tuned_sparse_blocks(compiled.include_words)
-        else:
+            return jax.jit(
+                lambda xw: compiler.run_compiled(
+                    compiled, xw, sparse=True, factorize=False,
+                    **blocks).argmax(-1),
+                donate_argnums=donate)
+        if name == "dense":
             blocks = tuned_blocks(compiled.n_unique)
-        run_bucket = jax.jit(
+            return jax.jit(
+                lambda xw: compiler.run_compiled(
+                    compiled, xw, sparse=False, factorize=False,
+                    **blocks).argmax(-1),
+                donate_argnums=donate)
+        # bottom of the ladder: pure-XLA oracle — no Pallas lowering, no
+        # donation, so it survives whatever failure killed the kernels
+        assert name == "oracle", name
+        return jax.jit(
             lambda xw: compiler.run_compiled(
-                compiled, xw, sparse=sparse, factorize=factorize,
-                **blocks).argmax(-1),
-            donate_argnums=donate,
-        )
-    if args.artifact and (trained_this_run or compiled.tuned != tuned_at_start):
-        # persist schedules + newly recorded tunings for cold starts; a
-        # pure load with nothing new recorded skips the multi-MB rewrite
-        compiled.save(args.artifact)
-        print(f"saved artifact (schedules + tuned tilings) to {args.artifact}")
+                compiled, xw, use_kernel=False).argmax(-1))
+
+    levels = []
+    if use_kernel:
+        if factorize:
+            levels.append("factorized")
+        if sparse:
+            levels.append("sparse")
+        levels.append("dense")
+    levels.append("oracle")
+    if args.mesh:
+        # the sharded engine degrades to the unsharded ladder: a mesh-only
+        # failure (bad spec, per-shard lowering) still serves every bucket
+        levels.insert(0, f"mesh-{levels[0]}")
+    ladder = ops.EngineLadder(
+        [(name, (lambda n=name: build_engine(n))) for name in levels])
 
     Xr, _ = make_boolean_classification(
         args.requests, config.n_features, config.n_classes, seed=2
@@ -284,24 +339,55 @@ def serve_tm(args) -> None:
     n_buckets = (n + bucket - 1) // bucket
     xp = np.pad(xp, ((0, n_buckets * bucket - n), (0, 0)))
 
-    run_bucket(jnp.asarray(xp[:bucket])).block_until_ready()   # warm (1 trace)
+    mon = StragglerMonitor(threshold=args.bucket_deadline or 2.0, warmup=2)
+    # guarded warm probe: kernel/lowering failures surface here (one trace
+    # per attempted engine, demoting through the ladder), so the request
+    # stream starts on an engine that actually runs
+    ladder.run(lambda: jnp.asarray(xp[:bucket]), bucket="warm", count=False)
     t0 = time.perf_counter()
-    outs = [
-        run_bucket(jnp.asarray(xp[i * bucket:(i + 1) * bucket]))
-        for i in range(n_buckets)
-    ]
-    for o in outs:                      # drain the in-flight stream
-        o.block_until_ready()
+    outs = []
+    for i in range(n_buckets):
+        mon.start_step()
+        faults.sleep_if("serve.slow_bucket", step=i)    # deadline drill site
+        out = ladder.run(
+            lambda i=i: jnp.asarray(xp[i * bucket:(i + 1) * bucket]),
+            bucket=i)
+        outs.append(np.asarray(out))
+        flag = mon.end_step(i)
+        # an engine's FIRST bucket pays its jit trace — exempting it from
+        # the deadline stops one slow bucket cascading down the ladder
+        if flag and args.bucket_deadline and ladder.counts[ladder.engine] > 1:
+            ladder.demote(
+                f"bucket deadline: {flag['seconds'] * 1e3:.1f} ms > "
+                f"{args.bucket_deadline:g}x EWMA {flag['ewma'] * 1e3:.1f} ms",
+                bucket=i)
     dt = time.perf_counter() - t0
-    preds = np.concatenate([np.asarray(o) for o in outs])[:n]
-    path = ("factorized-schedule" if factorize else
-            "sparse-schedule" if sparse else "fused-kernel") \
-        if use_kernel else "oracle"
-    if args.mesh:
-        path = f"clause-sharded {path} ({args.mesh})"
-    print(f"{n} inferences in {n_buckets} buckets of {bucket} [{path}] "
-          f"in {dt * 1e3:.2f} ms ({n / dt:,.0f} inf/s, "
+    preds = np.concatenate(outs)[:n]
+    if args.artifact and (trained_this_run
+                          or compiled.tuned != tuned_at_start):
+        # persist schedules + newly recorded tunings for cold starts; a
+        # pure load with nothing new recorded skips the multi-MB rewrite.
+        # Saved AFTER the stream so tilings recorded lazily by ladder
+        # builders (when an engine first actually runs) persist too.
+        compiled.save(args.artifact)
+        print(f"saved artifact (schedules + tuned tilings) to {args.artifact}")
+    engine_labels = {"factorized": "factorized-schedule",
+                     "sparse": "sparse-schedule",
+                     "dense": "fused-kernel", "oracle": "oracle"}
+    eng = ladder.engine
+    label = (f"clause-sharded {engine_labels[eng[len('mesh-'):]]} "
+             f"({args.mesh})" if eng.startswith("mesh-")
+             else engine_labels[eng])
+    print(f"{n} inferences in {n_buckets} buckets of {bucket} "
+          f"[{label}] in {dt * 1e3:.2f} ms ({n / dt:,.0f} inf/s, "
           f"{dt / n * 1e6:.2f} us/inf)")
+    health = dict(
+        requests=n, buckets=n_buckets, bucket_size=bucket,
+        ladder=levels, final_engine=ladder.engine,
+        engine_buckets=ladder.counts, demotions=ladder.demotions,
+        stragglers=mon.events,
+    )
+    print("SERVE_HEALTH " + json.dumps(health))
     hist = np.bincount(preds, minlength=config.n_classes)
     print("pred class histogram:", hist.tolist())
 
@@ -362,6 +448,14 @@ def main() -> None:
                     help="TM kernel path: pin the flat bit-chain sparse "
                          "kernel even when the artifact's partial_term_"
                          "sharing clears the factorized-serving threshold")
+    ap.add_argument("--factorize", action="store_true",
+                    help="TM kernel path: start the engine ladder on the "
+                         "factorized kernel even when the artifact's "
+                         "measured term sharing is below the threshold")
+    ap.add_argument("--bucket-deadline", type=float, default=None,
+                    help="TM: demote the serving engine when a bucket runs "
+                         "longer than this multiple of the EWMA of bucket "
+                         "wall-times (soft per-bucket deadline)")
     ap.add_argument("--artifact", default=None,
                     help="TM: compiled-artifact .npz path — loaded instead "
                          "of train+compile when it exists, (re)saved with "

@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data import ShardedBatcher, make_boolean_classification, paper_dataset
-from repro.runtime import PreemptionHandler, StragglerMonitor
+from repro.runtime import (RESUME_EXIT_CODE, PreemptionHandler,
+                           StragglerMonitor, faults)
 
 
 def train_tm(args) -> None:
@@ -124,6 +125,7 @@ def train_tm(args) -> None:
                 config, ta, jnp.asarray(xb), jnp.asarray(yb),
                 jnp.uint32(step), **step_kw,
             )
+        faults.sleep_if("train.slow_step", step=step)   # straggler drill
         flag = mon.end_step(step)
         if flag:
             print(f"straggler flagged: {flag}")
@@ -131,13 +133,18 @@ def train_tm(args) -> None:
             mgr.save(step + 1, {"ta": ta},
                      extra={"step": step + 1, "loader": loader.state_dict()},
                      blocking=False)
+        faults.sigterm_if("train.sigterm", step=step)    # preemption drill
         if pre.preempted:
-            print("preempted: checkpointing and exiting for restart")
-            if mgr:
-                pre.checkpoint_and_exit(lambda: mgr.save(
+            # checkpoint (when durable storage is configured) and exit with
+            # the dedicated code the launcher restarts on — even without a
+            # --ckpt-dir the exit code must still say "resume me", not crash
+            print("preempted: checkpointing and exiting for restart "
+                  f"(exit code {RESUME_EXIT_CODE})")
+            pre.checkpoint_and_exit(
+                (lambda: mgr.save(
                     step + 1, {"ta": ta},
                     extra={"step": step + 1, "loader": loader.state_dict()}))
-            raise SystemExit(42)
+                if mgr else (lambda: None))
         if (step + 1) % args.log_every == 0:
             st = tm.TMState(ta_state=ta, steps=jnp.int32(step))
             acc = float(tm.accuracy(config, st, jnp.asarray(Xte), jnp.asarray(yte)))
@@ -147,6 +154,10 @@ def train_tm(args) -> None:
         mgr.save(args.steps, {"ta": ta},
                  extra={"step": args.steps, "loader": loader.state_dict()})
         mgr.wait()
+    import json as _json
+
+    print("TRAIN_HEALTH " + _json.dumps(dict(
+        steps=args.steps, resumed_from=start_step, stragglers=mon.events)))
 
 
 def train_lm(args) -> None:

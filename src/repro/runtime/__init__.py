@@ -1,2 +1,3 @@
-from repro.runtime.preemption import PreemptionHandler  # noqa: F401
+from repro.runtime import faults  # noqa: F401
+from repro.runtime.preemption import RESUME_EXIT_CODE, PreemptionHandler  # noqa: F401
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
