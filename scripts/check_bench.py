@@ -9,7 +9,10 @@
 For each baseline:fresh pair, compares the LEAD row (the first
 ``*_fused_*`` / ``*_sparse_*`` / ``*_mesh_*`` row — bench modules emit the
 lead shape first) and exits non-zero when the fresh time exceeds
-``factor`` x the committed baseline.  The committed ``BENCH_*.json`` files
+``factor`` x the committed baseline.  Serve-gateway reports
+(``BENCH_serve.json``, ``benchmark == "serve_gateway"``) gate their lead
+row on BOTH axes: fresh p99 latency above ``factor`` x baseline OR
+achieved req/s below baseline / ``factor`` fails.  The committed ``BENCH_*.json`` files
 are the cross-PR perf trajectory; this gate turns them from "diffable
 artifact" into an enforced floor — a PR that makes the kernels >2x slower
 in interpret mode fails CI instead of silently regressing the trajectory.
@@ -54,6 +57,42 @@ def lead_fused_row(report: dict) -> dict | None:
     return None
 
 
+def lead_serve_row(report: dict) -> dict | None:
+    """First serving-gateway row: carries BOTH ``p99_ms`` (latency) and
+    ``req_per_s`` (throughput) — benchmarks/serve_gateway.py emits the
+    open-loop Poisson shape first."""
+    for row in report.get("rows", []):
+        if "p99_ms" in row and "req_per_s" in row:
+            return row
+    return None
+
+
+def _check_serve(baseline_path, fresh_path, base, fresh, factor) -> str:
+    """Serve-gateway rule: p99 latency may not grow AND achieved
+    throughput may not shrink by more than ``factor``."""
+    b_row = lead_serve_row(base)
+    f_row = lead_serve_row(fresh)
+    if b_row is None:
+        raise RegressionError(
+            f"{baseline_path}: committed serve baseline has no "
+            "p99_ms/req_per_s lead row — refresh the BENCH file")
+    if f_row is None:
+        raise RegressionError(
+            f"{fresh_path}: no serve row — the gateway bench did not run")
+    b_p99, f_p99 = float(b_row["p99_ms"]), float(f_row["p99_ms"])
+    b_rps, f_rps = float(b_row["req_per_s"]), float(f_row["req_per_s"])
+    verdict = (f"lead {b_row['name']}: p99 {b_p99:.2f}->{f_p99:.2f} ms, "
+               f"req/s {b_rps:.0f}->{f_rps:.0f}")
+    if f_p99 > factor * b_p99:
+        raise RegressionError(
+            f"{verdict} — p99 exceeds the {factor:.1f}x regression gate")
+    if b_rps > 0 and f_rps < b_rps / factor:
+        raise RegressionError(
+            f"{verdict} — throughput collapsed past the "
+            f"{factor:.1f}x regression gate")
+    return f"ok: {verdict}"
+
+
 def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
     """Returns 'ok' | 'skipped: ...' | raises RegressionError."""
     try:
@@ -78,6 +117,9 @@ def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
         if base.get(key) != fresh.get(key):
             return (f"skipped: {key} mismatch "
                     f"(baseline {base.get(key)!r} vs fresh {fresh.get(key)!r})")
+
+    if base.get("benchmark") == "serve_gateway":
+        return _check_serve(baseline_path, fresh_path, base, fresh, factor)
 
     b_row = lead_fused_row(base)
     f_row = lead_fused_row(fresh)

@@ -62,15 +62,34 @@ class EngineLadder:
     the same input.  Only the LAST engine's failure propagates: the run
     degrades instead of crashing.  ``counts``/``demotions`` feed the serve
     health summary (which engine actually served each bucket).
+
+    **Re-promotion** (``promote_after=N``): a demotion is not a life
+    sentence — after ``N`` consecutive healthy buckets at the current
+    level, the next :meth:`run` serves its bucket as a PROBE on the engine
+    one level up.  A successful probe promotes (the probe bucket IS served
+    by the higher engine, so probing costs nothing extra); a failed probe
+    falls back to the current engine for the same input, resets the
+    healthy streak, and DOUBLES the cooldown (the streak required before
+    the next probe) — a permanent fault converges to exponentially-rare
+    probes while a transient one no longer pins the tenant on the slow
+    oracle forever.  A demotion resets both streak and cooldown to base.
+    ``promote_after=None`` (default) keeps the demote-only behavior.
+    ``promotions``/``probe_failures`` feed the health summary alongside
+    ``demotions``.
     """
 
-    def __init__(self, engines):
+    def __init__(self, engines, promote_after: int | None = None):
         self._names = [name for name, _ in engines]
         self._builders = dict(engines)
         self._built: dict = {}
         self._level = 0
         self.counts = {name: 0 for name in self._names}
         self.demotions: list = []
+        self.promote_after = promote_after
+        self.promotions: list = []
+        self.probe_failures: list = []
+        self._healthy = 0                    # success streak at this level
+        self._cooldown = promote_after or 0  # streak required to probe up
 
     @property
     def engine(self) -> str:
@@ -92,23 +111,63 @@ class EngineLadder:
             dict(frm=frm, to=to, bucket=bucket, reason=reason))
         print(f"engine demoted: {frm} -> {to} (bucket {bucket}): {reason}")
         self._level += 1
+        self._healthy = 0
+        self._cooldown = self.promote_after or 0
         return True
+
+    def _run_at(self, level, make_input):
+        name = self._names[level]
+        fn = self._built.get(name)
+        if fn is None:
+            fn = self._built[name] = self._builders[name]()
+        return jax.block_until_ready(fn(make_input()))
+
+    def _maybe_probe(self, make_input, bucket, count):
+        """Serve this bucket on the engine one level up when the healthy
+        streak has cleared the cooldown; returns the output or None."""
+        if (not self.promote_after or self._level == 0
+                or self._healthy < self._cooldown):
+            return None
+        target = self._names[self._level - 1]
+        try:
+            out = self._run_at(self._level - 1, make_input)
+        except Exception as e:  # noqa: BLE001 — a failed probe never escapes
+            self.probe_failures.append(dict(
+                engine=target, bucket=bucket,
+                reason=f"{type(e).__name__}: {e}"))
+            self._healthy = 0
+            self._cooldown *= 2
+            print(f"engine probe failed: {target} (bucket {bucket}); "
+                  f"cooldown now {self._cooldown} healthy buckets")
+            return None
+        self.promotions.append(
+            dict(to=target, frm=self.engine, bucket=bucket,
+                 after_healthy=self._healthy))
+        print(f"engine promoted: {self.engine} -> {target} (bucket {bucket}) "
+              f"after {self._healthy} healthy buckets")
+        self._level -= 1
+        self._healthy = 0
+        self._cooldown = self.promote_after
+        if count:
+            self.counts[target] += 1
+        return out
 
     def run(self, make_input, bucket=None, count=True):
         """Run the current engine on ``make_input()``, demoting on failure."""
+        probed = self._maybe_probe(make_input, bucket, count)
+        if probed is not None:
+            return probed
         while True:
             name = self.engine
             try:
-                fn = self._built.get(name)
-                if fn is None:
-                    fn = self._built[name] = self._builders[name]()
-                out = jax.block_until_ready(fn(make_input()))
+                out = self._run_at(self._level, make_input)
             except Exception as e:  # noqa: BLE001 — any engine failure demotes
                 if not self.demote(f"{type(e).__name__}: {e}", bucket=bucket):
                     raise
                 continue
             if count:
                 self.counts[name] += 1
+            self._healthy += 1
             return out
 
 

@@ -12,6 +12,9 @@ reporting throughput the way the paper's jupyter flow does.
 from __future__ import annotations
 
 import argparse
+import asyncio
+import itertools
+import signal
 import time
 
 import jax
@@ -36,11 +39,24 @@ def serve_tm(args) -> None:
     the request stream starts, any per-bucket failure demotes one engine
     and retries that bucket, and ``--bucket-deadline N`` additionally
     demotes when a bucket runs longer than ``N x`` the ``StragglerMonitor``
-    EWMA of bucket wall-times.  The run ends with a machine-readable
-    ``SERVE_HEALTH`` JSON line reporting which engine served each bucket,
-    every demotion, and straggler flags.  Buckets are executed
-    synchronously (blocked per bucket) so failures and deadlines attribute
-    to the bucket that caused them.
+    EWMA of bucket wall-times.  ``--promote-after N`` adds the
+    re-promotion path: after N healthy buckets the ladder probes one level
+    up.  The run ends with a machine-readable ``SERVE_HEALTH`` JSON line
+    reporting which engine served each bucket, every demotion/promotion,
+    and straggler flags.
+
+    **Gateway** — requests flow through the resilient async gateway
+    (``runtime/gateway.py``): continuous per-tenant batching with
+    age-based partial flushes (``--max-wait-ms``), bounded-queue admission
+    control (``--max-queue``), per-request deadlines (``--deadline-ms``),
+    and graceful drain on SIGTERM (``--drain-timeout``) — every offered
+    request is answered or shed with a typed reason, and the final
+    ``GATEWAY_HEALTH`` JSON line proves it (``unaccounted == 0`` or the
+    process exits non-zero).  ``--zoo N`` serves N round-robin tenants
+    through the artifact zoo (``runtime/zoo.py``): per-tenant circuit
+    breakers and an LRU-capped artifact cache.  Buckets still execute one
+    at a time (a single executor thread) so failures and deadlines
+    attribute to the bucket that caused them.
     """
     import json
     import os
@@ -329,30 +345,34 @@ def serve_tm(args) -> None:
         # failure (bad spec, per-shard lowering) still serves every bucket
         levels.insert(0, f"mesh-{levels[0]}")
     ladder = ops.EngineLadder(
-        [(name, (lambda n=name: build_engine(n))) for name in levels])
+        [(name, (lambda n=name: build_engine(n))) for name in levels],
+        promote_after=args.promote_after)
 
     Xr, _ = make_boolean_classification(
         args.requests, config.n_features, config.n_classes, seed=2
     )
     xp = np.asarray(packetizer.pack_literals(jnp.asarray(Xr)))
-    n = xp.shape[0]
-    n_buckets = (n + bucket - 1) // bucket
-    xp = np.pad(xp, ((0, n_buckets * bucket - n), (0, 0)))
+    n, W = xp.shape
 
     mon = StragglerMonitor(threshold=args.bucket_deadline or 2.0, warmup=2)
     # guarded warm probe: kernel/lowering failures surface here (one trace
     # per attempted engine, demoting through the ladder), so the request
     # stream starts on an engine that actually runs
     ladder.run(lambda: jnp.asarray(xp[:bucket]), bucket="warm", count=False)
-    t0 = time.perf_counter()
-    outs = []
-    for i in range(n_buckets):
+
+    bucket_i = itertools.count()
+
+    def run_rows(rows):
+        # one gateway bucket: zero-pad to the fixed jit trace shape (a
+        # partial age/drain flush never retraces), run the engine ladder,
+        # and keep the straggler/deadline accounting of the old sync loop
+        i = next(bucket_i)
         mon.start_step()
         faults.sleep_if("serve.slow_bucket", step=i)    # deadline drill site
-        out = ladder.run(
-            lambda i=i: jnp.asarray(xp[i * bucket:(i + 1) * bucket]),
-            bucket=i)
-        outs.append(np.asarray(out))
+        padded = np.zeros((bucket, W), xp.dtype)
+        padded[:len(rows)] = rows
+        out = ladder.run(lambda: jnp.asarray(padded), bucket=i)
+        preds = np.asarray(out)[:len(rows)]
         flag = mon.end_step(i)
         # an engine's FIRST bucket pays its jit trace — exempting it from
         # the deadline stops one slow bucket cascading down the ladder
@@ -361,8 +381,58 @@ def serve_tm(args) -> None:
                 f"bucket deadline: {flag['seconds'] * 1e3:.1f} ms > "
                 f"{args.bucket_deadline:g}x EWMA {flag['ewma'] * 1e3:.1f} ms",
                 bucket=i)
+        return preds
+
+    zoo = None
+    if args.zoo:
+        # multi-tenant mode: requests round-robin over --zoo tenants that
+        # share the compiled engines but carry per-tenant circuit breakers;
+        # max_entries < tenants keeps the LRU churning under real pressure
+        from repro.runtime.zoo import ArtifactZoo
+
+        nbytes = int(compiled.include_words.nbytes + compiled.votes.nbytes)
+        zoo = ArtifactZoo(lambda tenant: (tenant, nbytes),
+                          max_entries=max(args.zoo - 1, 1))
+        runner = zoo.runner(lambda obj, rows: run_rows(rows))
+    else:
+        runner = lambda tenant, rows: run_rows(rows)
+
+    def tenant_of(j):
+        return f"t{j % args.zoo}" if args.zoo else "t0"
+
+    async def stream():
+        from repro.runtime.gateway import Gateway
+
+        gw = await Gateway(
+            runner, bucket=bucket, max_queue=args.max_queue or None,
+            max_wait=args.max_wait_ms / 1e3,
+            drain_timeout=args.drain_timeout).start()
+        loop = asyncio.get_running_loop()
+        stop = asyncio.Event()
+        try:
+            # graceful drain: SIGTERM stops admission, flushes what fits
+            # in the drain window, typed-sheds the rest, exits 0
+            loop.add_signal_handler(signal.SIGTERM, stop.set)
+        except (NotImplementedError, RuntimeError):
+            pass
+        deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+        futs = [gw.offer(tenant_of(j), xp[j], deadline=deadline)
+                for j in range(n)]
+        answered = asyncio.ensure_future(asyncio.gather(*futs))
+        sigterm = asyncio.ensure_future(stop.wait())
+        await asyncio.wait({answered, sigterm},
+                           return_when=asyncio.FIRST_COMPLETED)
+        health = await gw.drain()
+        sigterm.cancel()
+        return await answered, health, stop.is_set()
+
+    t0 = time.perf_counter()
+    responses, gw_health, sigtermed = asyncio.run(stream())
     dt = time.perf_counter() - t0
-    preds = np.concatenate(outs)[:n]
+    if sigtermed:
+        print("SIGTERM: gateway drained "
+              f"({gw_health['answered']}/{gw_health['offered']} answered, "
+              f"{gw_health['shed_total']} typed-shed)")
     if args.artifact and (trained_this_run
                           or compiled.tuned != tuned_at_start):
         # persist schedules + newly recorded tunings for cold starts; a
@@ -378,16 +448,27 @@ def serve_tm(args) -> None:
     label = (f"clause-sharded {engine_labels[eng[len('mesh-'):]]} "
              f"({args.mesh})" if eng.startswith("mesh-")
              else engine_labels[eng])
-    print(f"{n} inferences in {n_buckets} buckets of {bucket} "
-          f"[{label}] in {dt * 1e3:.2f} ms ({n / dt:,.0f} inf/s, "
-          f"{dt / n * 1e6:.2f} us/inf)")
+    n_answered = gw_health["answered"]
+    n_buckets = gw_health["buckets"]
+    print(f"{n_answered} inferences in {n_buckets} buckets of {bucket} "
+          f"[{label}] in {dt * 1e3:.2f} ms ({max(n_answered, 1) / dt:,.0f} "
+          f"inf/s, {dt / max(n_answered, 1) * 1e6:.2f} us/inf)")
     health = dict(
         requests=n, buckets=n_buckets, bucket_size=bucket,
         ladder=levels, final_engine=ladder.engine,
         engine_buckets=ladder.counts, demotions=ladder.demotions,
+        promotions=ladder.promotions, probe_failures=ladder.probe_failures,
         stragglers=mon.events,
     )
     print("SERVE_HEALTH " + json.dumps(health))
+    if zoo is not None:
+        gw_health["zoo"] = zoo.health()
+    print("GATEWAY_HEALTH " + json.dumps(gw_health))
+    if gw_health["unaccounted"]:
+        raise SystemExit(
+            f"gateway accounting violated: {gw_health['unaccounted']} "
+            f"of {gw_health['offered']} requests unaccounted for")
+    preds = np.asarray([r.pred for r in responses if r.ok], np.int64)
     hist = np.bincount(preds, minlength=config.n_classes)
     print("pred class histogram:", hist.tolist())
 
@@ -456,6 +537,30 @@ def main() -> None:
                     help="TM: demote the serving engine when a bucket runs "
                          "longer than this multiple of the EWMA of bucket "
                          "wall-times (soft per-bucket deadline)")
+    ap.add_argument("--promote-after", type=int, default=None,
+                    help="TM: probe the engine one ladder level up after "
+                         "this many consecutive healthy buckets (failed "
+                         "probes double the cooldown); default: demote-only")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="TM gateway: bound the pending-request queue — a "
+                         "full queue sheds new requests with the typed "
+                         "reason queue_full (default: unbounded)")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="TM gateway: flush a partial bucket once its "
+                         "oldest request has waited this long (age-based "
+                         "continuous batching)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="TM gateway: per-request deadline — a request "
+                         "still queued past it is shed deadline_expired, "
+                         "never executed (default: none)")
+    ap.add_argument("--drain-timeout", type=float, default=5.0,
+                    help="TM gateway: seconds the SIGTERM/end-of-stream "
+                         "drain may spend flushing before shedding the "
+                         "remainder drain_timeout")
+    ap.add_argument("--zoo", type=int, default=None,
+                    help="TM gateway: serve this many round-robin tenants "
+                         "through the artifact zoo (per-tenant circuit "
+                         "breakers, LRU-capped cache) instead of one")
     ap.add_argument("--artifact", default=None,
                     help="TM: compiled-artifact .npz path — loaded instead "
                          "of train+compile when it exists, (re)saved with "

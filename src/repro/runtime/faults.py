@@ -66,6 +66,22 @@ SITES = {
     "artifact.save_abort": "compiler.CompiledTM.save — dies after writing "
                            "the tmp file, before the atomic replace "
                            "(SIGTERM mid-save)",
+    "gateway.queue_overflow": "runtime/gateway.py admission — forces the "
+                              "bounded request queue to report full, so the "
+                              "request is SHED with a typed queue_full "
+                              "rejection (never silently dropped)",
+    "gateway.drain_timeout": "runtime/gateway.py drain — forces the drain "
+                             "timer to expire immediately, so still-queued "
+                             "requests are rejected drain_timeout instead "
+                             "of being flushed",
+    "zoo.evict_inflight": "runtime/zoo.py eviction — forces the LRU scan to "
+                          "target a PINNED (in-flight) artifact; the zoo "
+                          "must defer the eviction until the lease drops, "
+                          "never yank a bucket's model mid-run",
+    "zoo.load_fail": "runtime/zoo.py artifact load — an I/O/validation "
+                     "failure loading a tenant's artifact (@step gates on "
+                     "the tenant's trailing integer, e.g. zoo.load_fail@2 "
+                     "targets tenant 't2' only)",
 }
 
 
@@ -205,6 +221,12 @@ def injected(spec: str):
 # -- module-level conveniences (the call-site API) ---------------------------
 def armed() -> bool:
     return get_injector().armed
+
+
+def fire_if(site: str, step=None) -> bool:
+    """True when ``site`` is armed (consumes one firing) — for call sites
+    whose degraded behavior is a branch, not an exception/sleep/signal."""
+    return get_injector().poll(site, step) is not None
 
 
 def raise_if(site: str, step=None) -> None:

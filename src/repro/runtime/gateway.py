@@ -1,0 +1,344 @@
+"""Resilient async serving gateway: continuous batching + admission control.
+
+The synchronous serve loop (pre-PR-7 ``launch/serve.py``) executed a fixed
+request array bucket by bucket — fine for a benchmark, useless under live
+traffic where requests arrive one at a time, carry deadlines, and belong
+to different tenants/models.  This gateway is the traffic-facing layer:
+
+* **Continuous batching** — requests are admitted into a partially-filled
+  per-tenant bucket (one jit trace per tenant: the executed batch is
+  always padded to the fixed ``bucket`` size, so a partial flush never
+  retraces).  A bucket flushes when it fills, when its OLDEST request has
+  waited ``max_wait`` seconds (age-based flush — tail latency is bounded
+  even at low arrival rates), or at drain.
+
+* **Admission control / load shedding** — the pending-request queue is
+  bounded by ``max_queue``: when it is full the request is REJECTED at
+  admission with the typed reason ``queue_full`` instead of growing an
+  unbounded backlog.  Per-request deadlines are enforced at dequeue: an
+  expired request is rejected ``deadline_expired``, never executed and
+  never silently dropped.  Every offered request resolves to exactly one
+  :class:`Response` — answered or shed with a typed reason — and
+  :meth:`Gateway.health` proves it (``unaccounted`` must be 0).
+
+* **Typed bucket rejection** — the runner (engine ladder / artifact zoo)
+  signals per-bucket failure by raising; an exception carrying a
+  ``shed_reason`` attribute (e.g. ``zoo.TenantQuarantined``) rejects the
+  bucket's requests with that reason, anything else with
+  ``engine_failed``.  One tenant's poisoned artifact therefore sheds THAT
+  tenant's requests while other tenants keep flushing.
+
+* **Graceful drain** — :meth:`drain` (wired to SIGTERM by the server)
+  stops admission (``shutting_down``), flushes the remaining partial
+  buckets under ``drain_timeout`` seconds, and rejects whatever is still
+  queued when the timer expires with ``drain_timeout``.  The final
+  ``GATEWAY_HEALTH`` dict accounts for 100% of offered requests.
+
+Fault sites (``runtime/faults.py``): ``gateway.queue_overflow`` forces an
+admission-time shed; ``gateway.drain_timeout`` forces the drain timer to
+expire immediately.  Both are drilled in ``tests/test_gateway.py`` and
+under live Poisson load in ``benchmarks/serve_gateway.py --chaos``.
+
+Execution is serialized through a single worker thread: the engines are
+jit'd callables whose per-bucket wall-time is the unit of straggler/
+deadline attribution, and the event loop stays free to admit, age-flush,
+and shed while a bucket is on the accelerator.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime import faults
+
+# Typed shed reasons: the closed vocabulary of ways the gateway refuses
+# work.  Every non-answer carries exactly one of these — "silently
+# dropped" is not in the list by construction.
+QUEUE_FULL = "queue_full"            # admission: bounded queue at capacity
+SHUTTING_DOWN = "shutting_down"      # admission: drain already started
+DEADLINE_EXPIRED = "deadline_expired"  # dequeue: request deadline passed
+DRAIN_TIMEOUT = "drain_timeout"      # drain: still queued when timer expired
+ENGINE_FAILED = "engine_failed"      # execution: runner raised (untyped)
+# The built-in vocabulary; runner exceptions extend it via a
+# ``shed_reason`` attribute (zoo: tenant_quarantined, load_failed), so
+# shed counters are an OPEN dict keyed by whatever reasons actually fired.
+SHED_REASONS = (QUEUE_FULL, SHUTTING_DOWN, DEADLINE_EXPIRED, DRAIN_TIMEOUT,
+                ENGINE_FAILED)
+
+
+@dataclasses.dataclass
+class Response:
+    """Terminal outcome of one request: answered or typed-shed."""
+    tenant: str
+    ok: bool
+    pred: Optional[int] = None
+    reason: Optional[str] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _Request:
+    tenant: str
+    x: np.ndarray
+    t_submit: float
+    deadline: Optional[float]            # absolute clock() time, or None
+    future: "asyncio.Future[Response]"
+
+
+class Gateway:
+    """Async request gateway over a per-tenant bucket runner.
+
+    ``runner(tenant, rows)`` executes one bucket: ``rows`` is a non-empty
+    list of request payloads (each an ``(W,)`` array) and the return value
+    is the ``(len(rows),)`` prediction array.  The runner owns padding to
+    its jit trace shape, engine-ladder demotion, and straggler accounting;
+    it raises to reject the whole bucket (typed via a ``shed_reason``
+    attribute on the exception, else ``engine_failed``).
+    """
+
+    def __init__(self, runner: Callable, *, bucket: int = 128,
+                 max_queue: Optional[int] = None, max_wait: float = 0.02,
+                 drain_timeout: float = 5.0, clock=time.monotonic):
+        self._runner = runner
+        self.bucket = int(bucket)
+        self.max_queue = max_queue if max_queue and max_queue > 0 else None
+        self.max_wait = float(max_wait)
+        self.drain_timeout = float(drain_timeout)
+        self._clock = clock
+        self._queues: Dict[str, collections.deque] = {}
+        self._pending = 0
+        self._inflight = 0
+        self._draining = False
+        self._task: Optional[asyncio.Task] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._idle: Optional[asyncio.Event] = None
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="gw-exec")
+        # -- accounting: offered == answered + sum(shed.values()) always --
+        self.offered = 0
+        self.admitted = 0
+        self.answered = 0
+        self.shed: Dict[str, int] = {}
+        self.buckets = 0
+        self.flushes = {"full": 0, "age": 0, "drain": 0}
+        self.tenants: Dict[str, dict] = {}
+        self._latencies: List[float] = []
+
+    # -- admission -----------------------------------------------------------
+
+    def _tenant_row(self, tenant: str) -> dict:
+        row = self.tenants.get(tenant)
+        if row is None:
+            row = self.tenants[tenant] = dict(offered=0, answered=0, shed={})
+        return row
+
+    def _resolve(self, req: _Request, resp: Response) -> None:
+        if req.future.done():        # already rejected (e.g. drain sweep)
+            return
+        row = self._tenant_row(req.tenant)
+        if resp.ok:
+            self.answered += 1
+            row["answered"] += 1
+            self._latencies.append(resp.latency_s)
+        else:
+            self.shed[resp.reason] = self.shed.get(resp.reason, 0) + 1
+            row["shed"][resp.reason] = row["shed"].get(resp.reason, 0) + 1
+        req.future.set_result(resp)
+
+    def _shed_at_admission(self, tenant: str, reason: str,
+                           fut: "asyncio.Future[Response]") -> None:
+        self.shed[reason] = self.shed.get(reason, 0) + 1
+        row = self._tenant_row(tenant)["shed"]
+        row[reason] = row.get(reason, 0) + 1
+        fut.set_result(Response(tenant=tenant, ok=False, reason=reason))
+
+    def offer(self, tenant: str, x, deadline: Optional[float] = None
+              ) -> "asyncio.Future[Response]":
+        """Admit (or typed-shed) one request; returns a Future[Response].
+
+        Must be called on the event-loop thread.  ``deadline`` is seconds
+        from now; a request still queued when it expires is rejected
+        ``deadline_expired`` at dequeue time.
+        """
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        now = self._clock()
+        self.offered += 1
+        self._tenant_row(tenant)["offered"] += 1
+        if self._draining:
+            self._shed_at_admission(tenant, SHUTTING_DOWN, fut)
+            return fut
+        over = self.max_queue is not None and self._pending >= self.max_queue
+        if over or faults.fire_if("gateway.queue_overflow"):
+            self._shed_at_admission(tenant, QUEUE_FULL, fut)
+            return fut
+        self.admitted += 1
+        req = _Request(tenant=tenant, x=x, t_submit=now,
+                       deadline=None if deadline is None else now + deadline,
+                       future=fut)
+        self._queues.setdefault(tenant, collections.deque()).append(req)
+        self._pending += 1
+        if self._idle is not None:
+            self._idle.clear()
+        if self._wake is not None:
+            self._wake.set()
+        return fut
+
+    async def submit(self, tenant: str, x,
+                     deadline: Optional[float] = None) -> Response:
+        return await self.offer(tenant, x, deadline)
+
+    # -- dispatch ------------------------------------------------------------
+
+    async def start(self) -> "Gateway":
+        self._wake = asyncio.Event()
+        self._idle = asyncio.Event()
+        self._idle.set()
+        self._task = asyncio.create_task(self._dispatch_loop())
+        return self
+
+    def _expire(self, now: float) -> None:
+        """Shed queued requests whose deadline has already passed."""
+        for q in self._queues.values():
+            kept = [r for r in q if not (r.deadline is not None
+                                         and r.deadline < now)]
+            if len(kept) != len(q):
+                for r in q:
+                    if r.deadline is not None and r.deadline < now:
+                        self._pending -= 1
+                        self._resolve(r, Response(
+                            tenant=r.tenant, ok=False,
+                            reason=DEADLINE_EXPIRED,
+                            latency_s=now - r.t_submit))
+                q.clear()
+                q.extend(kept)
+
+    def _pick_flush(self, now: float):
+        """(tenant, cause) to flush now, or (None, earliest-age-due)."""
+        due: Optional[float] = None
+        for tenant, q in self._queues.items():
+            if not q:
+                continue
+            if len(q) >= self.bucket:
+                return tenant, "full"
+            if self._draining:
+                return tenant, "drain"
+            age_due = q[0].t_submit + self.max_wait
+            if age_due <= now:
+                return tenant, "age"
+            due = age_due if due is None else min(due, age_due)
+        return None, due
+
+    async def _dispatch_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            now = self._clock()
+            self._expire(now)
+            tenant, cause = self._pick_flush(now)
+            if tenant is None:
+                if self._pending == 0 and self._inflight == 0:
+                    self._idle.set()
+                self._wake.clear()
+                timeout = None if cause is None else max(cause - now, 0.0)
+                try:
+                    await asyncio.wait_for(self._wake.wait(), timeout)
+                except asyncio.TimeoutError:
+                    pass
+                continue
+            q = self._queues[tenant]
+            reqs = [q.popleft() for _ in range(min(self.bucket, len(q)))]
+            self._pending -= len(reqs)
+            self._inflight += len(reqs)
+            self.flushes[cause] += 1
+            self.buckets += 1
+            try:
+                preds = await loop.run_in_executor(
+                    self._pool, self._runner, tenant,
+                    [r.x for r in reqs])
+            except Exception as e:  # noqa: BLE001 — typed bucket rejection
+                reason = getattr(e, "shed_reason", ENGINE_FAILED)
+                end = self._clock()
+                for r in reqs:
+                    self._resolve(r, Response(
+                        tenant=tenant, ok=False, reason=reason,
+                        latency_s=end - r.t_submit))
+            else:
+                preds = np.asarray(preds)
+                end = self._clock()
+                for i, r in enumerate(reqs):
+                    self._resolve(r, Response(
+                        tenant=tenant, ok=True, pred=int(preds[i]),
+                        latency_s=end - r.t_submit))
+            finally:
+                self._inflight -= len(reqs)
+
+    # -- drain / shutdown ----------------------------------------------------
+
+    async def drain(self, timeout: Optional[float] = None) -> dict:
+        """Stop admitting, flush what fits in the window, shed the rest.
+
+        Returns the final health dict.  Idempotent enough for the common
+        SIGTERM-then-natural-completion race: a second call finds empty
+        queues and returns immediately.
+        """
+        self._draining = True
+        if self._wake is not None:
+            self._wake.set()
+        timeout = self.drain_timeout if timeout is None else timeout
+        if faults.fire_if("gateway.drain_timeout"):
+            timeout = 0.0
+        if self._idle is not None:
+            try:
+                await asyncio.wait_for(self._idle.wait(), timeout)
+            except asyncio.TimeoutError:
+                now = self._clock()
+                for q in self._queues.values():
+                    while q:
+                        r = q.popleft()
+                        self._pending -= 1
+                        self._resolve(r, Response(
+                            tenant=r.tenant, ok=False, reason=DRAIN_TIMEOUT,
+                            latency_s=now - r.t_submit))
+                # an in-flight bucket still completes (its futures resolve
+                # normally); wait for it so shutdown never abandons work
+                await self._idle.wait()
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        self._pool.shutdown(wait=True)
+        return self.health()
+
+    # -- health --------------------------------------------------------------
+
+    def health(self) -> dict:
+        """GATEWAY_HEALTH: full accounting — ``unaccounted`` must be 0."""
+        lat = np.sort(np.asarray(self._latencies)) * 1e3
+        pct = (lambda p: float(lat[min(int(len(lat) * p / 100),
+                                       len(lat) - 1)]) if len(lat) else None)
+        shed_total = sum(self.shed.values())
+        return dict(
+            offered=self.offered, admitted=self.admitted,
+            answered=self.answered,
+            shed={k: v for k, v in self.shed.items() if v},
+            shed_total=shed_total,
+            unaccounted=self.offered - self.answered - shed_total,
+            buckets=self.buckets, bucket_size=self.bucket,
+            flushes=dict(self.flushes),
+            queue_depth=self._pending, draining=self._draining,
+            latency_ms=dict(p50=pct(50), p99=pct(99)),
+            tenants={
+                t: dict(offered=row["offered"], answered=row["answered"],
+                        shed={k: v for k, v in row["shed"].items() if v})
+                for t, row in self.tenants.items()},
+        )

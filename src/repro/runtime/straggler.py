@@ -7,6 +7,11 @@ wall-times; steps slower than ``threshold x`` EWMA are flagged with the
 step index so the launcher can correlate across hosts and evict/replace the
 offender (the actual replacement is the cluster manager's job; elastic
 restore in checkpoint/store.py handles the mesh change).
+
+Flagged samples are EXCLUDED from the EWMA update: an outlier that feeds
+back into the baseline inflates it, so a second straggler right behind the
+first would compare against a poisoned mean and slip under the threshold.
+The EWMA tracks the healthy-step distribution only.
 """
 
 from __future__ import annotations
@@ -40,5 +45,8 @@ class StragglerMonitor:
             if self.n > self.warmup and dt > self.threshold * self.ewma:
                 flagged = {"step": step, "seconds": dt, "ewma": self.ewma}
                 self.events.append(flagged)
-            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+            if flagged is None:
+                # outliers stay out of the baseline: folding a straggler in
+                # would desensitize the very next detection
+                self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         return flagged

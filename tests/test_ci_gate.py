@@ -109,6 +109,49 @@ def test_check_bench_gates_sparse_lead_rows(cb):
     assert mod.main(["--pair", f"{base}:{fresh2}"]) == 0
 
 
+def _serve_report(p99_ms, req_per_s, *, backend="cpu", interpret=True):
+    return dict(
+        benchmark="serve_gateway", backend=backend,
+        interpret_mode=interpret,
+        rows=[
+            dict(name="serve_openloop_poisson_r1500_t3_b64",
+                 us_per_call=p99_ms * 1e3, p99_ms=p99_ms,
+                 req_per_s=req_per_s, derived=""),
+            dict(name="serve_closedloop_c32_t3_b64",
+                 us_per_call=p99_ms * 2e3, p99_ms=p99_ms * 2,
+                 req_per_s=req_per_s * 3, derived=""),
+        ],
+    )
+
+
+def test_check_bench_gates_serve_lead_row_both_axes(cb):
+    """BENCH_serve.json gates on BOTH p99 latency and achieved req/s:
+    either axis regressing past the factor fails."""
+    mod, write = cb
+    base = write("b.json", _serve_report(8.0, 1400.0))
+    ok = write("f_ok.json", _serve_report(12.0, 1100.0))     # both < 2x
+    slow = write("f_slow.json", _serve_report(20.0, 1400.0))  # p99 2.5x
+    starved = write("f_starved.json", _serve_report(8.0, 500.0))  # rps /2.8
+    assert mod.main(["--pair", f"{base}:{ok}"]) == 0
+    assert mod.main(["--pair", f"{base}:{slow}"]) == 1
+    assert mod.main(["--pair", f"{base}:{starved}"]) == 1
+
+
+def test_check_bench_serve_missing_rows_and_backend_skip(cb):
+    """Serve pairs keep the fused-gate file semantics: a leadless fresh
+    or baseline fails, a cross-backend comparison skips."""
+    mod, write = cb
+    base = write("b.json", _serve_report(8.0, 1400.0))
+    leadless = write("leadless.json", dict(
+        benchmark="serve_gateway", backend="cpu", interpret_mode=True,
+        rows=[dict(name="serve_openloop", us_per_call=1.0, derived="")]))
+    assert mod.main(["--pair", f"{base}:{leadless}"]) == 1
+    assert mod.main(["--pair", f"{leadless}:{base}"]) == 1
+    tpu = write("tpu.json", _serve_report(99.0, 10.0, backend="tpu",
+                                          interpret=False))
+    assert mod.main(["--pair", f"{base}:{tpu}"]) == 0
+
+
 def test_check_bench_skips_cross_backend_comparison(cb):
     """TPU fresh numbers never gate against a CPU-interpret baseline."""
     mod, write = cb

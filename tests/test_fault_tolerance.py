@@ -364,6 +364,68 @@ def test_engine_ladder_exhausted_propagates():
     assert not lad.demote("manual")                  # nowhere to go
 
 
+def test_engine_ladder_repromotes_after_healthy_streak():
+    """A transient failure demotes; after ``promote_after`` healthy buckets
+    the ladder probes one level up and promotes when the probe succeeds —
+    the probe bucket itself is served by the higher engine."""
+    calls = {"n": 0}
+
+    def flaky_builder():
+        def f(x):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient")
+            return x + 10
+        return f
+
+    lad = ops.EngineLadder(
+        [("flaky", flaky_builder), ("good", lambda: (lambda x: x + 1))],
+        promote_after=2)
+    assert lad.run(lambda: np.int64(0), bucket=0) == 1   # demoted to good
+    assert lad.engine == "good" and len(lad.demotions) == 1
+    assert lad.run(lambda: np.int64(0), bucket=1) == 1   # healthy streak 2
+    out = lad.run(lambda: np.int64(0), bucket=2)         # probe bucket
+    assert out == 10 and lad.engine == "flaky"
+    assert lad.promotions == [dict(to="flaky", frm="good", bucket=2,
+                                   after_healthy=2)]
+    assert lad.counts == {"flaky": 1, "good": 2}
+    assert lad.probe_failures == []
+
+
+def test_engine_ladder_failed_probe_doubles_cooldown_drill():
+    """Fault-injection drill: a kernel engine that keeps faulting makes
+    every probe fail — each failed probe falls back to the serving engine
+    for the SAME bucket and doubles the healthy-streak cooldown, so the
+    fault converges to exponentially-rare probes; once the fault clears,
+    the next probe promotes."""
+    def kernel_builder():
+        def f(x):
+            faults.raise_if("kernel.dense")
+            return x + 10
+        return f
+
+    lad = ops.EngineLadder(
+        [("kernel", kernel_builder), ("oracle", lambda: (lambda x: x + 1))],
+        promote_after=1)
+    with faults.injected("kernel.dense*3"):
+        # firing 1: initial demotion; firings 2-3: two failed probes
+        assert lad.run(lambda: np.int64(0), bucket=0) == 1   # demote; streak 1
+        assert lad.engine == "oracle"
+        assert lad.run(lambda: np.int64(0), bucket=1) == 1   # probe fails
+        assert len(lad.probe_failures) == 1 and lad._cooldown == 2
+        assert lad.run(lambda: np.int64(0), bucket=2) == 1   # streak 2
+        assert lad.run(lambda: np.int64(0), bucket=3) == 1   # probe fails
+        assert len(lad.probe_failures) == 2 and lad._cooldown == 4
+        for b in range(4, 7):                                # streak 2..4
+            assert lad.run(lambda: np.int64(0), bucket=b) == 1
+        # fault site exhausted: this probe succeeds and promotes
+        assert lad.run(lambda: np.int64(0), bucket=7) == 10
+    assert lad.engine == "kernel"
+    assert lad.promotions[0]["to"] == "kernel"
+    # every bucket was answered by SOME engine — probes never drop work
+    assert lad.counts["kernel"] + lad.counts["oracle"] == 8
+
+
 SERVE_ARGV = ["-m", "repro.launch.serve", "--arch", "tm-tiny",
               "--requests", "640", "--bucket", "128",
               "--epochs", "1", "--n-train", "256"]

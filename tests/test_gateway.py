@@ -1,0 +1,234 @@
+"""Gateway behavior: continuous batching, admission control, typed load
+shedding, deadlines, and graceful drain — including the fault-injection
+drills for ``gateway.queue_overflow`` and ``gateway.drain_timeout``.
+
+The invariant every test closes with: the final health dict accounts for
+100% of offered requests (``unaccounted == 0``) — a request is either
+answered or shed with a typed reason, never silently dropped.
+"""
+
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import faults
+from repro.runtime.gateway import (
+    DEADLINE_EXPIRED, DRAIN_TIMEOUT, ENGINE_FAILED, QUEUE_FULL,
+    SHUTTING_DOWN, Gateway, Response,
+)
+
+pytestmark = pytest.mark.gateway
+
+
+def echo_runner(tenant, rows):
+    """Pred = the request's first element (identity routing check)."""
+    return np.array([int(r[0]) for r in rows])
+
+
+def _go(coro):
+    return asyncio.run(coro)
+
+
+def _accounted(h):
+    assert h["unaccounted"] == 0, h
+    assert h["offered"] == h["answered"] + h["shed_total"], h
+
+
+def test_full_buckets_flush_and_route_predictions():
+    async def go():
+        gw = await Gateway(echo_runner, bucket=4, max_wait=5.0).start()
+        futs = [gw.offer("t", np.array([i + 10])) for i in range(8)]
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert [r.pred for r in res] == [i + 10 for i in range(8)]
+    assert all(r.ok for r in res)
+    assert h["buckets"] == 2 and h["flushes"]["full"] == 2
+    assert h["answered"] == 8
+    assert h["latency_ms"]["p50"] is not None
+    _accounted(h)
+
+
+def test_age_based_flush_of_partial_bucket():
+    async def go():
+        gw = await Gateway(echo_runner, bucket=64, max_wait=0.02).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(3)]
+        res = await asyncio.gather(*futs)   # resolves via the age flush
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert [r.pred for r in res] == [0, 1, 2]
+    assert h["flushes"]["age"] >= 1
+    _accounted(h)
+
+
+def test_bounded_queue_sheds_with_typed_reason():
+    async def go():
+        gw = await Gateway(echo_runner, bucket=2, max_queue=2,
+                           max_wait=0.01).start()
+        # no await between offers: the dispatcher cannot drain in between,
+        # so admission decisions are deterministic
+        futs = [gw.offer("t", np.array([i])) for i in range(5)]
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert [r.ok for r in res] == [True, True, False, False, False]
+    assert {r.reason for r in res if not r.ok} == {QUEUE_FULL}
+    assert h["shed"][QUEUE_FULL] == 3 and h["answered"] == 2
+    _accounted(h)
+
+
+def test_queue_overflow_fault_drill():
+    """gateway.queue_overflow forces admission-time shedding even with
+    queue headroom — the degraded path is a typed reject, not a drop."""
+    async def go():
+        gw = await Gateway(echo_runner, bucket=2, max_wait=0.01).start()
+        with faults.injected("gateway.queue_overflow*2"):
+            futs = [gw.offer("t", np.array([i])) for i in range(4)]
+            res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert [r.ok for r in res] == [False, False, True, True]
+    assert h["shed"][QUEUE_FULL] == 2
+    _accounted(h)
+
+
+def test_expired_deadline_rejected_never_executed():
+    ran_rows = []
+
+    def recording_runner(tenant, rows):
+        ran_rows.extend(int(r[0]) for r in rows)
+        return echo_runner(tenant, rows)
+
+    async def go():
+        gw = await Gateway(recording_runner, bucket=64,
+                           max_wait=0.03).start()
+        dead = gw.offer("t", np.array([7]), deadline=0.0)
+        live = gw.offer("t", np.array([8]), deadline=30.0)
+        res = await asyncio.gather(dead, live)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert not res[0].ok and res[0].reason == DEADLINE_EXPIRED
+    assert res[1].ok and res[1].pred == 8
+    assert ran_rows == [8]          # the expired request never executed
+    _accounted(h)
+
+
+def test_runner_failure_rejects_bucket_typed():
+    class Quarantined(RuntimeError):
+        shed_reason = "tenant_quarantined"
+
+    def runner(tenant, rows):
+        if tenant == "bad":
+            raise Quarantined("poisoned")
+        if tenant == "ugly":
+            raise RuntimeError("untyped crash")
+        return echo_runner(tenant, rows)
+
+    async def go():
+        gw = await Gateway(runner, bucket=2, max_wait=0.01).start()
+        futs = ([gw.offer("bad", np.array([1])) for _ in range(2)]
+                + [gw.offer("ugly", np.array([2])) for _ in range(2)]
+                + [gw.offer("good", np.array([3])) for _ in range(2)])
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert {r.reason for r in res[:2]} == {"tenant_quarantined"}
+    assert {r.reason for r in res[2:4]} == {ENGINE_FAILED}
+    assert all(r.ok and r.pred == 3 for r in res[4:])
+    assert h["tenants"]["good"]["answered"] == 2
+    assert h["tenants"]["bad"]["shed"]["tenant_quarantined"] == 2
+    _accounted(h)
+
+
+def test_drain_flushes_partial_buckets_then_rejects_offers():
+    async def go():
+        gw = await Gateway(echo_runner, bucket=64, max_wait=30.0).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(3)]
+        h = await gw.drain()                 # flush, not abandon
+        res = await asyncio.gather(*futs)
+        late = await gw.offer("t", np.array([9]))
+        return res, h, late
+
+    res, h, late = _go(go())
+    assert all(r.ok for r in res)
+    assert h["flushes"]["drain"] >= 1 and h["draining"]
+    assert not late.ok and late.reason == SHUTTING_DOWN
+    _accounted(h)
+
+
+def test_drain_timeout_fault_drill_sheds_queued_keeps_inflight():
+    """gateway.drain_timeout collapses the drain window to zero: queued
+    requests shed typed, the in-flight bucket still completes."""
+    def slow_runner(tenant, rows):
+        time.sleep(0.15)
+        return echo_runner(tenant, rows)
+
+    async def go():
+        gw = await Gateway(slow_runner, bucket=1, max_wait=0.0).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(3)]
+        await asyncio.sleep(0.05)            # first bucket is in flight
+        with faults.injected("gateway.drain_timeout"):
+            h = await gw.drain()
+        res = await asyncio.gather(*futs)
+        return res, h
+
+    res, h = _go(go())
+    assert res[0].ok                          # in-flight bucket completed
+    assert {r.reason for r in res if not r.ok} == {DRAIN_TIMEOUT}
+    assert h["answered"] >= 1
+    assert h["shed"][DRAIN_TIMEOUT] == len(res) - h["answered"]
+    _accounted(h)
+
+
+def test_tenants_batch_independently():
+    seen = []
+
+    def runner(tenant, rows):
+        seen.append((tenant, len(rows)))
+        return echo_runner(tenant, rows)
+
+    async def go():
+        gw = await Gateway(runner, bucket=2, max_wait=5.0).start()
+        futs = []
+        for i in range(2):
+            futs.append(gw.offer("a", np.array([i])))
+            futs.append(gw.offer("b", np.array([10 + i])))
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert sorted(seen) == [("a", 2), ("b", 2)]   # never mixed in a bucket
+    assert [r.pred for r in res] == [0, 10, 1, 11]
+    assert set(h["tenants"]) == {"a", "b"}
+    _accounted(h)
+
+
+def test_health_mid_stream_counts_queued_as_unaccounted():
+    """A non-final health snapshot exposes in-queue work as unaccounted;
+    the FINAL (post-drain) health must always read zero."""
+    async def go():
+        gw = await Gateway(echo_runner, bucket=64, max_wait=30.0).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(3)]
+        mid = gw.health()
+        h = await gw.drain()
+        await asyncio.gather(*futs)
+        return mid, h
+
+    mid, h = _go(go())
+    assert mid["unaccounted"] == 3 and mid["queue_depth"] == 3
+    assert h["unaccounted"] == 0 and h["queue_depth"] == 0

@@ -211,6 +211,30 @@ def test_straggler_monitor_flags_slow_step():
     assert mon.events
 
 
+def test_straggler_monitor_back_to_back_stragglers_both_flag():
+    """Flagged outliers must not fold into the EWMA: the second of two
+    consecutive stragglers used to compare against a baseline poisoned by
+    the first and slip under the threshold."""
+    import time
+
+    mon = StragglerMonitor(alpha=0.5, threshold=3.0, warmup=1)
+
+    def step(idx, dt):
+        mon.start_step()
+        mon._t0 = time.monotonic() - dt      # simulate a dt-second step
+        return mon.end_step(idx)
+
+    for s in range(4):
+        assert step(s, 0.01) is None         # healthy baseline ~10ms
+    ewma_before = mon.ewma
+    first = step(4, 0.5)
+    second = step(5, 0.5)                    # back-to-back straggler
+    assert first is not None and second is not None
+    assert [e["step"] for e in mon.events] == [4, 5]
+    # the baseline still tracks the healthy distribution
+    assert mon.ewma == ewma_before
+
+
 def test_preemption_handler_flag():
     h = PreemptionHandler()
     assert not h.preempted

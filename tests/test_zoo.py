@@ -1,0 +1,227 @@
+"""Artifact-zoo behavior: LRU eviction under a memory cap, circuit-breaker
+open/half-open/close transitions with exponential backoff, the
+eviction-while-in-flight drill, the ``zoo.load_fail`` drill, and the
+end-to-end "corrupt tenant quarantined while healthy tenants keep serving"
+scenario through the gateway.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.runtime import faults
+from repro.runtime.gateway import Gateway
+from repro.runtime.zoo import (
+    CLOSED, HALF_OPEN, OPEN, ArtifactLoadError, ArtifactZoo, CircuitBreaker,
+    TenantQuarantined,
+)
+
+pytestmark = pytest.mark.gateway
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _mk_zoo(**kw):
+    loaded = []
+
+    def loader(tenant):
+        loaded.append(tenant)
+        return f"model:{tenant}", 100      # every artifact "weighs" 100 B
+
+    return ArtifactZoo(loader, **kw), loaded
+
+
+# -- LRU under the memory cap -------------------------------------------------
+
+def test_lru_eviction_under_byte_cap():
+    zoo, loaded = _mk_zoo(capacity_bytes=250)
+    for t in ("a", "b", "c"):
+        with zoo.lease(t) as obj:
+            assert obj == f"model:{t}"
+    # 3 x 100 B > 250 B: "a" (least recently used) was evicted
+    assert sorted(zoo._entries) == ["b", "c"] and zoo.evictions == 1
+    with zoo.lease("b"):                   # touch: "b" is now most recent
+        pass
+    with zoo.lease("d"):                   # over cap again: "c" goes
+        pass
+    assert sorted(zoo._entries) == ["b", "d"]
+    # evicted tenants reload on demand
+    with zoo.lease("a"):
+        pass
+    assert loaded == ["a", "b", "c", "d", "a"]
+
+
+def test_eviction_never_targets_pinned_entry():
+    zoo, _ = _mk_zoo(max_entries=1)
+    with zoo.lease("t0") as obj0:
+        # loading t1 pushes over the cap while t0 is LRU — but t0 is
+        # pinned, so the scan must pick the next unpinned victim or defer
+        with zoo.lease("t1"):
+            assert "t0" in zoo._entries     # still loaded mid-flight
+            assert obj0 == "model:t0"       # and untouched
+    # both leases released: deferred eviction (if any) has drained
+    assert len(zoo._entries) <= 1
+
+
+def test_evict_inflight_drill_defers_until_release():
+    zoo, _ = _mk_zoo(max_entries=1)
+    with faults.injected("zoo.evict_inflight*1"):
+        with zoo.lease("t0"):
+            with zoo.lease("t1"):
+                # the drill forced the scan to target pinned t0: it must be
+                # DEFERRED, not yanked mid-bucket
+                assert zoo._entries["t0"].evict_on_release
+                assert "t0" in zoo._entries
+            assert "t1" in zoo._entries
+        # lease released -> the deferred eviction lands
+        assert "t0" not in zoo._entries
+    assert zoo.deferred_evictions == 1 and zoo.evictions >= 1
+
+
+# -- circuit breaker ----------------------------------------------------------
+
+def test_breaker_open_half_open_close_transitions():
+    clk = Clock()
+    br = CircuitBreaker(threshold=2, cooldown=10.0, clock=clk)
+    assert br.state == CLOSED and br.allow()
+    br.record_failure()
+    assert br.state == CLOSED              # one fault is not a pattern
+    br.record_failure()
+    assert br.state == OPEN and not br.allow()
+    clk.advance(9.9)
+    assert not br.allow()                  # cooldown not elapsed
+    clk.advance(0.2)
+    assert br.allow() and br.state == HALF_OPEN
+    br.record_success()
+    assert br.state == CLOSED and br.trips == 0
+
+
+def test_breaker_failed_probe_doubles_backoff():
+    clk = Clock()
+    br = CircuitBreaker(threshold=1, cooldown=10.0, clock=clk)
+    br.record_failure()                    # trip 1: retry at t=10
+    assert br.state == OPEN and br.retry_at == 10.0
+    clk.advance(10.0)
+    assert br.allow()                      # half-open probe
+    br.record_failure()                    # probe fails -> trip 2
+    assert br.state == OPEN and br.retry_at == clk() + 20.0
+    clk.advance(20.0)
+    assert br.allow()
+    br.record_failure()                    # trip 3 -> 40s backoff
+    assert br.retry_at == clk() + 40.0
+
+
+def test_breaker_backoff_is_capped():
+    clk = Clock()
+    br = CircuitBreaker(threshold=1, cooldown=10.0, max_cooldown=25.0,
+                        clock=clk)
+    for _ in range(4):
+        br.record_failure()
+        clk.t = br.retry_at
+        assert br.allow()
+    assert br.retry_at - clk() <= 25.0
+
+
+# -- load failures and quarantine --------------------------------------------
+
+def test_load_fail_drill_quarantines_tenant():
+    clk = Clock()
+    zoo, loaded = _mk_zoo(breaker_threshold=2, breaker_cooldown=10.0,
+                          clock=clk)
+    with faults.injected("zoo.load_fail*2"):
+        for _ in range(2):
+            with pytest.raises(ArtifactLoadError) as ei:
+                with zoo.lease("t0"):
+                    pass
+            assert ei.value.shed_reason == "load_failed"
+    # threshold reached: the breaker is open, leases refuse typed
+    with pytest.raises(TenantQuarantined) as ei:
+        with zoo.lease("t0"):
+            pass
+    assert ei.value.shed_reason == "tenant_quarantined"
+    assert zoo.load_failures == 2 and zoo.quarantine_rejections == 1
+    assert loaded == []                    # the loader itself never ran
+    # backoff elapses -> half-open probe lease succeeds -> breaker closes
+    clk.advance(50.0)
+    with zoo.lease("t0") as obj:
+        assert obj == "model:t0"
+    zoo.record_success("t0")
+    assert zoo.breakers["t0"].state == CLOSED
+
+
+def test_load_fail_step_targets_tenant_by_trailing_digit():
+    zoo, _ = _mk_zoo()
+    with faults.injected("zoo.load_fail@2"):
+        with zoo.lease("t1"):              # untargeted tenant loads fine
+            pass
+        with pytest.raises(ArtifactLoadError):
+            with zoo.lease("t2"):
+                pass
+
+
+def test_engine_faults_reported_through_runner_trip_breaker():
+    clk = Clock()
+    zoo, _ = _mk_zoo(breaker_threshold=2, breaker_cooldown=10.0, clock=clk)
+
+    def serve(obj, rows):
+        if obj == "model:bad0":
+            raise RuntimeError("engine exhausted")
+        return np.zeros(len(rows), np.int64)
+
+    run = zoo.runner(serve)
+    for _ in range(2):
+        with pytest.raises(RuntimeError):
+            run("bad0", [np.zeros(2)])
+    with pytest.raises(TenantQuarantined):
+        run("bad0", [np.zeros(2)])
+    # the healthy tenant is untouched by bad0's quarantine
+    assert run("good1", [np.zeros(2)]).shape == (1,)
+    assert zoo.breakers["bad0"].state == OPEN
+    assert zoo.breakers["good1"].state == CLOSED
+
+
+# -- end to end through the gateway ------------------------------------------
+
+def test_corrupt_tenant_quarantined_healthy_tenants_keep_serving():
+    """The acceptance scenario: one tenant's artifact fails to load (a
+    corrupt file in the wild); its requests shed typed and its breaker
+    opens, while every other tenant's requests keep being answered."""
+    def loader(tenant):
+        if tenant == "corrupt0":
+            raise RuntimeError("checksum mismatch (simulated bit-rot)")
+        return tenant, 64
+
+    zoo = ArtifactZoo(loader, breaker_threshold=2)
+    run = zoo.runner(lambda obj, rows: np.array(
+        [int(r[0]) for r in rows]))
+
+    async def go():
+        gw = await Gateway(run, bucket=2, max_wait=0.01).start()
+        futs = []
+        for i in range(6):
+            futs.append(gw.offer("corrupt0", np.array([i])))
+            futs.append(gw.offer("good1", np.array([i])))
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = asyncio.run(go())
+    good = [r for r in res if r.tenant == "good1"]
+    bad = [r for r in res if r.tenant == "corrupt0"]
+    assert all(r.ok for r in good) and len(good) == 6
+    assert not any(r.ok for r in bad)
+    assert {r.reason for r in bad} <= {"load_failed", "tenant_quarantined"}
+    assert h["tenants"]["good1"]["answered"] == 6
+    assert h["unaccounted"] == 0           # zero silent drops
+    assert zoo.breakers["corrupt0"].state == OPEN
+    assert zoo.health()["breakers"]["corrupt0"]["state"] == OPEN
