@@ -56,18 +56,17 @@ def run(dataset: str = "mnist") -> list:
         rng.integers(0, 2, (_BENCH_BATCH, cfg.n_features), dtype=np.uint8)
     ))
 
-    def fwd(artifact, sparse, factorize=False):
+    def fwd(artifact, engine):
         jitted = jax.jit(lambda l: compiler.run_compiled(
-            artifact, l, use_kernel=True, interpret=interpret, sparse=sparse,
-            factorize=factorize,
+            artifact, l, engine=engine, interpret=interpret,
         ))
         return lambda: jitted(lit)
 
     t = _time_isolated(dict(
-        opt_fact=fwd(opt, True, factorize=True),
-        opt_sparse=fwd(opt, True),
-        opt_dense=fwd(opt, False),
-        dont_touch=fwd(dt, False),
+        opt_fact=fwd(opt, "factorized"),
+        opt_sparse=fwd(opt, "sparse"),
+        opt_dense=fwd(opt, "dense"),
+        dont_touch=fwd(dt, "dense"),
     ), _REPS)
 
     def stats_str(c):

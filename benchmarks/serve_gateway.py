@@ -79,10 +79,9 @@ def _build_runner(compiled, bucket: int, W: int, warm: bool = True):
     """
     ladder = ops.EngineLadder([
         ("dense", lambda: jax.jit(lambda xw: compiler.run_compiled(
-            compiled, xw, use_kernel=True, interpret=True, sparse=False,
-            factorize=False).argmax(-1))),
+            compiled, xw, engine="dense", interpret=True).argmax(-1))),
         ("oracle", lambda: jax.jit(lambda xw: compiler.run_compiled(
-            compiled, xw, use_kernel=False).argmax(-1))),
+            compiled, xw, engine="oracle").argmax(-1))),
     ])
     counter = itertools.count()
 

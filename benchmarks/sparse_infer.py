@@ -142,14 +142,13 @@ def run(fast: bool = True, reps: int = 5, autotune: bool = True) -> list:
             if autotune else {}
         )
 
-        def compiled_fwd(sparse, **blk):
-            # factorize=False: this bench tracks the PR-4 flat bit-chain
-            # kernel; without the pin the factorize heuristic would serve
-            # the term-schedule kernel on high-sharing trained artifacts
-            # and silently corrupt the sparse trajectory row
+        def compiled_fwd(engine, **blk):
+            # engine="sparse" (not "auto"): this bench tracks the PR-4
+            # flat bit-chain kernel; under "auto" the factorize heuristic
+            # would serve the term-schedule kernel on high-sharing trained
+            # artifacts and silently corrupt the sparse trajectory row
             jitted = jax.jit(lambda l: compiler.run_compiled(
-                comp, l, use_kernel=True, interpret=interpret,
-                sparse=sparse, factorize=False, **blk,
+                comp, l, engine=engine, interpret=interpret, **blk,
             ))
             return lambda: jitted(lit)
 
@@ -162,13 +161,13 @@ def run(fast: bool = True, reps: int = 5, autotune: bool = True) -> list:
 
         def oracle_fwd():
             jitted = jax.jit(lambda l: compiler.run_compiled(
-                comp, l, use_kernel=False))
+                comp, l, engine="oracle"))
             return lambda: jitted(lit)
 
         t = _time_isolated(
             dict(
-                sparse=compiled_fwd(True, **sblocks),
-                dense=compiled_fwd(False, **dblocks),
+                sparse=compiled_fwd("sparse", **sblocks),
+                dense=compiled_fwd("dense", **dblocks),
                 uncompiled=raw_fwd(**rblocks),
             ),
             reps,

@@ -183,18 +183,17 @@ def run(fast: bool = True, reps: int = 5, autotune: bool = True) -> list:
         if autotune else {}
     )
 
-    def compiled_fwd(*, factorize, sparse=True, **blk):
+    def compiled_fwd(engine, **blk):
         jitted = jax.jit(lambda l: compiler.run_compiled(
-            comp, l, use_kernel=True, interpret=interpret,
-            sparse=sparse, factorize=factorize, **blk,
+            comp, l, engine=engine, interpret=interpret, **blk,
         ))
         return lambda: jitted(lit)
 
     t = _time_isolated(
         dict(
-            factorized=compiled_fwd(factorize=True, **fblocks),
-            sparse=compiled_fwd(factorize=False, **sblocks),
-            dense=compiled_fwd(factorize=False, sparse=False, **dblocks),
+            factorized=compiled_fwd("factorized", **fblocks),
+            sparse=compiled_fwd("sparse", **sblocks),
+            dense=compiled_fwd("dense", **dblocks),
         ),
         reps,
     )

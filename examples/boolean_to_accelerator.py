@@ -47,7 +47,7 @@ def main() -> None:
     # 3b. the same datapath through the fused Pallas kernel (interpret on CPU)
     pred_kernel = np.asarray(
         compiler.predict_compiled(compiled, jnp.asarray(Xte[:64]),
-                                  use_kernel=True, interpret=True))
+                                  engine="dense", interpret=True))
     assert (pred_kernel == pred_dense[:64]).all()
     print("verification: fused Pallas inference kernel path OK")
 

@@ -93,6 +93,47 @@ def _check_serve(baseline_path, fresh_path, base, fresh, factor) -> str:
     return f"ok: {verdict}"
 
 
+def lead_predict_row(report: dict) -> dict | None:
+    """First predict-policy row of an autotune_cost report — carries
+    ``regret`` (vs the full swept optimum) and ``timing_runs``."""
+    for row in report.get("rows", []):
+        if "predict" in row.get("name", "") and "regret" in row:
+            return row
+    return None
+
+
+# predict-policy regret ceiling: the cold-start tiling must be within 10%
+# of the full-sweep optimum (the PR's acceptance bar), with zero timing
+# runs.  Absolute, not baseline-relative — regret is already a ratio.
+_PREDICT_REGRET_MAX = 0.10
+
+
+def _check_autotune(baseline_path, fresh_path, base, fresh) -> str:
+    """Autotune-cost rule: fresh predict regret over the absolute ceiling
+    fails, as does a 'predict' row that spent timing runs (the zero-run
+    promise is the whole point of the policy)."""
+    if lead_predict_row(base) is None:
+        raise RegressionError(
+            f"{baseline_path}: committed autotune baseline has no "
+            "predict row with regret — refresh the BENCH file")
+    f_row = lead_predict_row(fresh)
+    if f_row is None:
+        raise RegressionError(
+            f"{fresh_path}: no predict row — the autotune bench did not run")
+    regret = float(f_row["regret"])
+    runs = int(f_row.get("timing_runs", -1))
+    verdict = (f"lead {f_row['name']}: regret {regret:.3f}, "
+               f"timing_runs {runs}")
+    if runs != 0:
+        raise RegressionError(
+            f"{verdict} — predict policy must not issue timing runs")
+    if regret > _PREDICT_REGRET_MAX:
+        raise RegressionError(
+            f"{verdict} — exceeds the {_PREDICT_REGRET_MAX:.0%} "
+            "cold-start regret ceiling")
+    return f"ok: {verdict}"
+
+
 def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
     """Returns 'ok' | 'skipped: ...' | raises RegressionError."""
     try:
@@ -120,6 +161,9 @@ def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
 
     if base.get("benchmark") == "serve_gateway":
         return _check_serve(baseline_path, fresh_path, base, fresh, factor)
+
+    if base.get("benchmark") == "autotune_cost":
+        return _check_autotune(baseline_path, fresh_path, base, fresh)
 
     b_row = lead_fused_row(base)
     f_row = lead_fused_row(fresh)

@@ -1,0 +1,103 @@
+"""Refit the autotuner's analytical cost model from sidecar observations.
+
+Every ``policy="sweep"`` autotune run appends ``(features, tiling,
+measured_us)`` rows to the sidecar (``$REPRO_TUNE_DATA``, default
+``~/.cache/repro/autotune_data.json``).  This script turns that data back
+into coefficients:
+
+* ``--sweep`` first runs a representative sweep grid (three shapes per
+  kernel spanning small/wide/tall problems, synthetic include banks for
+  the schedule kernels spanning low/high sharing) so the sidecar has
+  fresh same-machine rows to fit from.
+* It then fits :class:`repro.kernels.cost_model.CostModel` per backend
+  mode and prints a ``DEFAULT_COEFFS``-shaped dict.  Paste the output
+  into ``kernels/cost_model.py`` to re-baseline the shipped defaults, or
+  just leave the rows in the sidecar — ``get_model`` refits from them
+  automatically on every process start.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import packetizer
+from repro.kernels import autotune, cost_model, ops
+
+# (B, C, W, K) dense-inference problems
+DENSE_SHAPES = ((64, 128, 8, 4), (128, 256, 16, 8), (64, 512, 32, 10))
+# (B, C, W, L, K) training problems (train sweeps are the slow ones);
+# the kernel packs literals itself so W must equal ceil(L/32).  Shapes
+# must be big enough that the candidate grid does NOT clip-collapse to
+# one tiling, or the fit never reaches MIN_FIT_ROWS distinct rows.
+TRAIN_SHAPES = ((256, 512, 16, 512, 8), (128, 384, 10, 320, 4))
+# (B, K, U, Wa, density, groups): include-bank generators for the
+# schedule kernels — `groups` rows sharing a base pattern controls
+# partial-term sharing, so the grid spans the factorize decision boundary
+SCHED_SHAPES = (
+    (64, 4, 128, 8, 0.04, 128),    # low sharing: every row independent
+    (128, 8, 256, 16, 0.02, 16),   # high sharing: 16 shared bases
+    (64, 10, 384, 24, 0.08, 48),
+)
+
+
+def synth_include(U: int, Wa: int, density: float, groups: int,
+                  seed: int = 0) -> np.ndarray:
+    """Random packed include bank with tunable row-sharing structure."""
+    rng = np.random.default_rng(seed)
+    L = Wa * 32
+    base = rng.random((groups, L)) < density * 0.6
+    bits = np.empty((U, L), np.uint8)
+    for r in range(U):
+        bits[r] = base[r % groups] | (rng.random(L) < density * 0.4)
+    return packetizer.pack_bits_np(bits)
+
+
+def run_sweeps(interpret: bool, reps: int | None) -> None:
+    for B, C, W, K in DENSE_SHAPES:
+        autotune.tune("fused_infer", B=B, C=C, W=W, K=K,
+                      interpret=interpret, policy="sweep",
+                      reps=reps, refresh=True)
+        print(f"swept fused_infer B{B} C{C} W{W} K{K}")
+    for B, C, W, L, K in TRAIN_SHAPES:
+        autotune.tune("fused_train", B=B, C=C, W=W, L=L, K=K,
+                      interpret=interpret, policy="sweep",
+                      reps=reps, refresh=True)
+        print(f"swept fused_train B{B} C{C} W{W} L{L} K{K}")
+    for i, (B, K, U, Wa, dens, groups) in enumerate(SCHED_SHAPES):
+        iw = synth_include(U, Wa, dens, groups, seed=i)
+        for kernel in ("sparse_infer", "term_infer"):
+            autotune.tune(kernel, B=B, K=K, include_words=iw,
+                          interpret=interpret, policy="sweep",
+                          reps=reps, refresh=True)
+            print(f"swept {kernel} B{B} U{U} W{Wa} dens{dens}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the representative sweep grid first")
+    ap.add_argument("--interpret", action="store_true", default=None,
+                    help="force interpret mode (default: auto-dispatch)")
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    interpret = ops.kernel_dispatch(None, args.interpret)[1]
+    if args.sweep:
+        run_sweeps(interpret, args.reps)
+
+    obs = cost_model.load_observations()
+    mode = autotune._mode_backend(interpret)
+    print(f"\n{len(obs)} sidecar rows at {cost_model.data_path()}; "
+          f"fitting mode {mode!r}")
+    fitted = cost_model.CostModel().fit(obs, mode)
+    print("DEFAULT_COEFFS = " + json.dumps(
+        {k: {n: round(v, 3) for n, v in theta.items()}
+         for k, theta in fitted.coeffs.items()}, indent=4))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,5 +13,21 @@ from repro.core.tm import (  # noqa: F401
     predict,
     vote_matrix,
 )
-from repro.core.compiler import CompiledTM, CompileStats, compile_tm, run_compiled  # noqa: F401
+from repro.core.compiler import (  # noqa: F401
+    CompiledTM,
+    CompileStats,
+    compile_tm,
+    predict_compiled,
+    run_compiled,
+)
 from repro.core.train import eval_step, fit, train_step  # noqa: F401
+
+
+def __getattr__(name):
+    # EngineSpec/ENGINE_NAMES live in kernels/ops and are re-exported
+    # lazily through compiler — eager resolution here would re-open the
+    # kernels <-> core import cycle compiler.__getattr__ exists to break.
+    if name in ("EngineSpec", "ENGINE_NAMES"):
+        from repro.core import compiler
+        return getattr(compiler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -166,6 +166,11 @@ class CompiledTM:
     # "<kernel>:B<bucket>"), shipped by save() so a cold-start server loads
     # a tuned schedule instead of re-paying the sweep
     tuned: dict = dataclasses.field(default_factory=dict, repr=False)
+    # candidate-independent cost-model features
+    # (``kernels/cost_model.artifact_features``), shipped by save() so a
+    # zoo cold-load predicts a tiling with neither timing runs nor the
+    # HLO-lowering the feature extraction pays once
+    features: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def n_unique(self) -> int:
@@ -253,14 +258,33 @@ class CompiledTM:
         blocks = self.tuned.get(self._tuned_key(kernel, bucket, rows, mode))
         return dict(blocks) if blocks is not None else None
 
+    def extract_features(self, refresh: bool = False) -> dict:
+        """Candidate-independent cost-model features of this artifact
+        (``kernels/cost_model.artifact_features``), memoized on the
+        instance and persisted by :meth:`save`.  The HLO-derived terms
+        degrade gracefully: a shape the oracle can't lower (or a backend
+        without cost analysis) still yields the schedule-statistic
+        features, so prediction never blocks serving."""
+        if self.features and not refresh:
+            return dict(self.features)
+        from repro.kernels import cost_model
+
+        try:
+            feats = cost_model.artifact_features(self)
+        except Exception:
+            feats = cost_model.artifact_features(self, with_hlo=False)
+        self.features = feats
+        return dict(feats)
+
     def save(self, path: str) -> str:
         """Write the artifact atomically with an integrity envelope.
 
         The default-tiling schedules ship inside the artifact (the
         "bitstream" carries its execution schedules); other tilings are
         rebuilt on demand from the include rows.  Autotuned tilings
-        recorded via record_tuned() ride in the meta JSON, so a server
-        cold-starting from this file skips the sweep entirely.
+        recorded via record_tuned() and the cost-model feature dict ride
+        in the meta JSON, so a server cold-starting from this file skips
+        both the sweep and the feature extraction entirely.
 
         Integrity: the meta carries ``ARTIFACT_SCHEMA_VERSION`` and a
         sha256 content checksum over every array + the meta itself, and
@@ -310,6 +334,7 @@ class CompiledTM:
                            n_terms=fsched.n_terms,
                            n_lit_bits=fsched.n_lit_bits),
             tuned=self.tuned,
+            features=self.extract_features(),
         )
         meta["checksum"] = _artifact_checksum(arrays, meta)
         final = path if path.endswith(".npz") else path + ".npz"
@@ -423,6 +448,7 @@ class CompiledTM:
                 )
             )
         compiled.tuned.update(meta.get("tuned", {}))
+        compiled.features.update(meta.get("features", {}) or {})
         validate_artifact(compiled)
         return compiled
 
@@ -595,43 +621,53 @@ def compile_tm(
     )
 
 
+_UNSET = object()   # sentinel distinguishing "not passed" from None/False
+
+
 def run_compiled(
     compiled: CompiledTM,
     x_packed: jnp.ndarray,
     *,
-    use_kernel: bool | None = None,
+    engine=None,
     interpret: bool | None = None,
-    fuse: bool = True,
-    sparse: bool | None = None,
-    factorize: bool | None = None,
+    use_kernel=_UNSET,
+    fuse=_UNSET,
+    sparse=_UNSET,
+    factorize=_UNSET,
     **blocks,
 ) -> jnp.ndarray:
     """Inference with the compiled artifact: (B, W_dense) packed literals ->
     (B, n_classes) int32 class sums.
 
-    Dispatch defers to ``kernels/ops`` resolution: ``use_kernel=None``
-    follows ``REPRO_USE_PALLAS``; ``interpret=None`` compiles on TPU and
-    interprets elsewhere.  On the kernel path the schedule kernels are the
-    default — ``factorize=None`` picks the two-level FACTORIZED schedule
-    kernel (``kernels/term_infer.py``: each unique AND term evaluated once
-    per sample slab) when the artifact's ``partial_term_sharing`` clears
-    ``FACTORIZE_SHARING_THRESHOLD``, else the flat block-sparse chain
-    kernel (``kernels/sparse_infer.py``); ``factorize=True``/``False``
-    pins the choice.  ``sparse=False`` pins the dense fused single-pass
-    kernel; ``fuse=False`` the legacy two-kernel pipeline; otherwise the
-    pure-jnp oracle.  All engines are bit-identical.  Empty-clause masking
-    is unnecessary here — compilation already dropped empty clauses (the
-    degenerate all-empty artifact keeps one all-zero clause whose votes
-    are zero).
+    The engine is selected by ``engine=`` — an ``ops.EngineSpec`` or one
+    of the :class:`ops.EngineLadder` level names ``"auto"`` (default) /
+    ``"factorized"`` / ``"sparse"`` / ``"dense"`` / ``"oracle"``.
+    ``"auto"`` defers to ``kernels/ops`` ambient resolution
+    (``REPRO_USE_PALLAS``; ``interpret=None`` compiles on TPU and
+    interprets elsewhere) and, on the kernel path, picks the two-level
+    FACTORIZED schedule kernel (``kernels/term_infer.py``: each unique
+    AND term evaluated once per sample slab) when the artifact's
+    ``partial_term_sharing`` clears ``FACTORIZE_SHARING_THRESHOLD``, else
+    the flat block-sparse chain kernel (``kernels/sparse_infer.py``); the
+    named engines pin the choice.  All engines are bit-identical.
+    Empty-clause masking is unnecessary here — compilation already
+    dropped empty clauses (the degenerate all-empty artifact keeps one
+    all-zero clause whose votes are zero).
+
+    The pre-``EngineSpec`` booleans (``use_kernel=``, ``fuse=``,
+    ``sparse=``, ``factorize=``) still work as deprecation shims emitting
+    ``DeprecationWarning``; they cannot be combined with ``engine=``.
 
     Schedule-path tiling comes from ``blocks`` keys ``block_c``/``block_j``
     (chain tiling, memoized on the artifact), ``block_s`` (sample slab),
     and — factorized only — ``block_t``/``term_w`` (term-table tiling);
     the dense paths keep their ``block_b``/``block_c``/``block_w``.
-    A caller that pins dense-only keys (``block_b``/``block_w``) without
-    an explicit ``sparse=`` keeps the dense fused kernel — a dense-tuned
+    Under ``engine="auto"``, a caller that pins dense-only keys
+    (``block_b``/``block_w``) keeps the dense fused kernel — a dense-tuned
     configuration must not be silently reinterpreted as a schedule tiling.
     """
+    import warnings
+
     from repro.kernels import ops
 
     known = {"block_b", "block_c", "block_w", "block_j", "block_s",
@@ -644,9 +680,36 @@ def run_compiled(
         raise TypeError(f"run_compiled: unknown block kwargs {sorted(unknown)}; "
                         f"expected a subset of {sorted(known)}")
 
+    legacy = {name: v for name, v in (
+        ("use_kernel", use_kernel), ("fuse", fuse),
+        ("sparse", sparse), ("factorize", factorize)) if v is not _UNSET}
+    if legacy:
+        if engine is not None:
+            raise TypeError(
+                f"run_compiled: engine= cannot be combined with the "
+                f"deprecated kwargs {sorted(legacy)}")
+        warnings.warn(
+            f"run_compiled kwargs {sorted(legacy)} are deprecated; pass "
+            f"engine=EngineSpec(...) or one of {ops.ENGINE_NAMES} instead",
+            DeprecationWarning, stacklevel=2)
+        use_kernel = legacy.get("use_kernel")
+        fuse = legacy.get("fuse", True)
+        sparse = legacy.get("sparse")
+        factorize = legacy.get("factorize")
+        uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    else:
+        spec = ops.EngineSpec.coerce(engine)
+        use_kernel, interpret, fuse, sparse, factorize = (
+            spec.resolve(interpret))
+        if spec.name == "auto":
+            uk, it = ops.kernel_dispatch(use_kernel, interpret)
+        else:
+            # named engines already resolved use_kernel; only interpret
+            # still follows the ambient backend default
+            uk, it = use_kernel, ops.kernel_dispatch(None, interpret)[1]
+
     xw = x_packed[:, jnp.asarray(compiled.word_ids)]        # dead-word elim
     votes = jnp.asarray(compiled.votes)
-    uk, it = ops.kernel_dispatch(use_kernel, interpret)
     if sparse is None:
         # the chain schedules ride the fused default, unless the caller
         # passed a dense-kernel tiling
@@ -704,3 +767,15 @@ def predict_compiled(compiled: CompiledTM, x: jnp.ndarray, **kw) -> jnp.ndarray:
     """(B, F) raw boolean features -> predicted class ids."""
     xp = packetizer.pack_literals(x)
     return jnp.argmax(run_compiled(compiled, xp, **kw), axis=-1)
+
+
+# Re-exported so engine selection and artifact execution come from one
+# module (serve and the tests spell ``compiler.EngineSpec``).  Lazy (PEP
+# 562) rather than a plain import: ``kernels/ops`` pulls the whole kernel
+# stack in, and the kernel modules import ``repro.core`` — an eager import
+# here is circular whenever a kernel module is the first thing imported.
+def __getattr__(name):
+    if name in ("EngineSpec", "ENGINE_NAMES"):
+        from repro.kernels import ops
+        return getattr(ops, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

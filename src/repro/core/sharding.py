@@ -47,6 +47,32 @@ def data_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def _engine_dispatch(engine, use_kernel, interpret, *, allowed,
+                     fuse: bool = True) -> tuple:
+    """Resolve a forward builder's ``(use_kernel, interpret, fuse)`` from
+    either an ``ops.EngineSpec``/name (the high-level vocabulary) or the
+    low-level ``use_kernel``/``interpret`` overrides — not both.  Each
+    builder already names its kernel, so only the engines it can actually
+    build (``allowed``) plus ``"auto"``/``"oracle"`` are accepted: asking
+    the dense-fused builder for ``"sparse"`` would silently build the
+    wrong schedule."""
+    from repro.kernels import ops
+
+    if engine is None:
+        uk, it = ops.kernel_dispatch(use_kernel, interpret)
+        return uk, it, fuse
+    if use_kernel is not None:
+        raise TypeError("pass engine= or use_kernel=, not both")
+    spec = ops.EngineSpec.coerce(engine)
+    if spec.name not in allowed:
+        raise ValueError(
+            f"engine {spec.name!r} does not apply to this sharded builder; "
+            f"one of {allowed}")
+    uk_s, it_s, fuse_s, _, _ = spec.resolve(interpret)
+    uk, it = ops.kernel_dispatch(uk_s, it_s)
+    return uk, it, fuse_s
+
+
 def tm_shardings(config: tm.TMConfig, mesh: Mesh):
     """(state_sharding, batch_sharding) for the TM train/serve steps."""
     d = data_axes(mesh)
@@ -58,7 +84,8 @@ def tm_shardings(config: tm.TMConfig, mesh: Mesh):
     return state, batch
 
 
-def sharded_forward_fn(mesh: Mesh, *, use_kernel: bool | None = None,
+def sharded_forward_fn(mesh: Mesh, *, engine=None,
+                       use_kernel: bool | None = None,
                        interpret: bool | None = None, fuse: bool = True,
                        blocks: dict | None = None):
     """Clause-sharded fused forward: (inc_words, votes, nonempty,
@@ -66,15 +93,19 @@ def sharded_forward_fn(mesh: Mesh, *, use_kernel: bool | None = None,
 
     An explicit ``shard_map`` schedule: each ``model`` shard evaluates its
     local clause bank with the fused single-pass inference kernel (or the
-    oracle, per dispatch) — the full bank never needs to fit one core's
-    VMEM — and one int32 ``psum`` over ``model`` completes the adder bank.
-    Exact: integer partial sums compose bit-identically to the unsharded
-    kernel.  Shape-agnostic (works for dense banks and compiled artifacts);
-    the clause axis size must be divisible by the ``model`` axis size.
+    oracle, per ``engine`` — ``"auto"``/``"dense"``/``"oracle"``, or the
+    low-level ``use_kernel`` override) — the full bank never needs to fit
+    one core's VMEM — and one int32 ``psum`` over ``model`` completes the
+    adder bank.  Exact: integer partial sums compose bit-identically to
+    the unsharded kernel.  Shape-agnostic (works for dense banks and
+    compiled artifacts); the clause axis size must be divisible by the
+    ``model`` axis size.
     """
     from repro.kernels import ops
 
-    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    uk, it, fuse = _engine_dispatch(engine, use_kernel, interpret,
+                                    allowed=("auto", "dense", "oracle"),
+                                    fuse=fuse)
     d = data_axes(mesh)
 
     def body(inc_loc, votes_loc, ne_loc, lw_loc):
@@ -96,6 +127,7 @@ def sharded_forward_fn(mesh: Mesh, *, use_kernel: bool | None = None,
 def sharded_schedule_forward_fn(mesh: Mesh, *,
                                 block_c: int, block_j: int,
                                 block_s: int | None = None,
+                                engine=None,
                                 use_kernel: bool | None = None,
                                 interpret: bool | None = None):
     """Clause-sharded COMPILED-SCHEDULE forward: each ``model`` shard owns
@@ -115,7 +147,8 @@ def sharded_schedule_forward_fn(mesh: Mesh, *,
     """
     from repro.kernels import ops, sparse_infer
 
-    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    uk, it, _ = _engine_dispatch(engine, use_kernel, interpret,
+                                 allowed=("auto", "sparse", "oracle"))
     d = data_axes(mesh)
     bs = block_s or sparse_infer.DEFAULT_BLOCK_S
 
@@ -143,6 +176,7 @@ def sharded_schedule_forward_fn(mesh: Mesh, *,
 def sharded_factorized_forward_fn(mesh: Mesh, *,
                                   block_t: int, block_c: int, block_j: int,
                                   block_s: int | None = None,
+                                  engine=None,
                                   use_kernel: bool | None = None,
                                   interpret: bool | None = None):
     """Clause-sharded FACTORIZED-schedule forward: each ``model`` shard
@@ -163,7 +197,8 @@ def sharded_factorized_forward_fn(mesh: Mesh, *,
     """
     from repro.kernels import ops, term_infer
 
-    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    uk, it, _ = _engine_dispatch(engine, use_kernel, interpret,
+                                 allowed=("auto", "factorized", "oracle"))
     d = data_axes(mesh)
     bs = block_s or term_infer.DEFAULT_BLOCK_S
 
@@ -192,6 +227,7 @@ def sharded_factorized_forward_fn(mesh: Mesh, *,
 
 
 def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh, *,
+                       engine=None,
                        use_kernel: bool | None = None,
                        interpret: bool | None = None, fuse: bool = True,
                        blocks: dict | None = None):
@@ -206,7 +242,9 @@ def sharded_predict_fn(config: tm.TMConfig, mesh: Mesh, *,
     """
     from repro.kernels import ops
 
-    uk, it = ops.kernel_dispatch(use_kernel, interpret)
+    uk, it, fuse = _engine_dispatch(engine, use_kernel, interpret,
+                                    allowed=("auto", "dense", "oracle"),
+                                    fuse=fuse)
     d = data_axes(mesh)
     votes_s = NamedSharding(mesh, P("model", None))
     inc_s = NamedSharding(mesh, P("model", None))

@@ -3,6 +3,15 @@
 ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
 and renamed its replication-check kwarg (``check_rep`` -> ``check_vma``);
 call through here so either jax generation works.
+
+The compiled-executable introspection surface drifted too: the old
+``jax.xla_computation`` idiom is gone (AOT ``jit(f).lower(...).compile()``
+replaces it), and ``Compiled.cost_analysis()`` returns a plain dict on
+newer jax but a one-per-device LIST of dicts on older releases.
+``launch/hlo_analysis.py`` / ``launch/roofline.py`` and the autotuner cost
+model all read these — they go through :func:`lower_compiled`,
+:func:`cost_analysis`, and :func:`memory_analysis` so a jax upgrade breaks
+one shim, not every analysis consumer.
 """
 
 from __future__ import annotations
@@ -30,3 +39,36 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=check_vma,
     )
+
+
+def lower_compiled(fn, *args, **kwargs):
+    """AOT-compile ``fn`` for the given abstract/concrete args and return
+    the ``Compiled`` executable (the modern replacement for the retired
+    ``jax.xla_computation`` idiom).  ``compiled.as_text()`` is the
+    post-optimization HLO that ``launch/hlo_analysis.parse_hlo`` consumes.
+    """
+    return jax.jit(fn).lower(*args, **kwargs).compile()
+
+
+def cost_analysis(compiled):
+    """``Compiled.cost_analysis()`` normalized to ONE dict (or None).
+
+    Older jax returns a list with one entry per device; newer jax returns
+    the dict directly.  Callers should never see the list shape.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):      # older jax: one dict per device
+        ca = ca[0] if ca else None
+    return ca if isinstance(ca, dict) else None
+
+
+def memory_analysis(compiled):
+    """``Compiled.memory_analysis()`` normalized to one object (or None) —
+    same one-per-device list drift as :func:`cost_analysis`."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:                      # backend without the analysis
+        return None
+    if isinstance(ma, (list, tuple)):
+        ma = ma[0] if ma else None
+    return ma

@@ -10,6 +10,7 @@ path is the default execution engine (it is XLA-compiled and fast on CPU).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 
@@ -45,6 +46,87 @@ def kernel_dispatch(use_kernel=None, interpret=None):
     """Public resolver for callers that branch on the dispatch decision
     (serve loop, compiled-artifact runner): (use_kernel, interpret)."""
     return _resolve(use_kernel, interpret)
+
+
+ENGINE_NAMES = ("auto", "factorized", "sparse", "dense", "oracle")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """One inference-engine selection, replacing the old ``use_kernel=/
+    sparse=/factorize=`` boolean sprawl on ``core.compiler.run_compiled``.
+
+    ``name`` uses the :class:`EngineLadder` level vocabulary — serve's
+    degradation ladder and the library share one set of words:
+
+    * ``"auto"`` — ambient dispatch (``REPRO_USE_PALLAS`` via
+      :func:`kernel_dispatch`); on the kernel path the schedule heuristics
+      pick factorized vs sparse exactly as before.
+    * ``"factorized"`` — the two-level shared-term schedule kernel.
+    * ``"sparse"`` — the flat block-sparse chain schedule kernel.
+    * ``"dense"`` — the fused dense kernel (``fuse=False`` for the legacy
+      two-kernel pipeline).
+    * ``"oracle"`` — the pure-jnp XLA reference path.
+
+    Named kernel engines pin ``use_kernel=True`` (that is what naming them
+    means); ``"oracle"`` pins ``use_kernel=False``.  ``use_kernel`` on the
+    spec is only meaningful for ``"auto"``, where it overrides the ambient
+    default; a contradiction (e.g. ``"sparse"`` with ``use_kernel=False``)
+    raises rather than silently serving a different engine.  ``interpret``
+    rides along as the spec's default, overridden by a call-site
+    ``interpret=``.
+    """
+
+    name: str = "auto"
+    use_kernel: bool | None = None
+    interpret: bool | None = None
+    fuse: bool = True
+
+    def __post_init__(self):
+        if self.name not in ENGINE_NAMES:
+            raise ValueError(
+                f"unknown engine {self.name!r}; one of {ENGINE_NAMES}")
+        if self.name == "oracle" and self.use_kernel:
+            raise ValueError("engine 'oracle' is the non-kernel path; "
+                             "use_kernel=True contradicts it")
+        if (self.name in ("factorized", "sparse", "dense")
+                and self.use_kernel is False):
+            raise ValueError(
+                f"engine {self.name!r} names a Pallas kernel; "
+                "use_kernel=False contradicts it")
+        if self.name == "factorized" and not self.fuse:
+            raise ValueError("engine 'factorized' has no unfused form")
+        if self.name == "sparse" and not self.fuse:
+            raise ValueError("engine 'sparse' has no unfused form")
+
+    @classmethod
+    def coerce(cls, spec) -> "EngineSpec":
+        """``None`` -> auto; a level-name string -> that engine; an
+        ``EngineSpec`` passes through."""
+        if spec is None:
+            return cls()
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return cls(name=spec)
+        raise TypeError(
+            f"engine must be an EngineSpec or one of {ENGINE_NAMES}, "
+            f"got {type(spec).__name__}")
+
+    def resolve(self, interpret: bool | None = None) -> tuple:
+        """Legacy dispatch tuple ``(use_kernel, interpret, fuse, sparse,
+        factorize)`` consumed by ``run_compiled``'s engine body; call-site
+        ``interpret`` wins over the spec's."""
+        it = self.interpret if interpret is None else interpret
+        if self.name == "factorized":
+            return True, it, True, True, True
+        if self.name == "sparse":
+            return True, it, True, True, False
+        if self.name == "dense":
+            return True, it, self.fuse, False, False
+        if self.name == "oracle":
+            return False, it, self.fuse, False, False
+        return self.use_kernel, it, self.fuse, None, None
 
 
 class EngineLadder:

@@ -29,8 +29,12 @@ def serve_tm(args) -> None:
     one jit trace (bucket-shaped input, donated on accelerators) serves any
     request count — the last bucket is zero-padded, never retraced.  With
     the kernel path active (``REPRO_USE_PALLAS=1`` / TPU) each bucket runs
-    the schedule/fused kernels; ``--autotune`` picks block sizes from the
-    cached sweep (kernels/autotune.py).
+    the schedule/fused kernels; ``--autotune`` picks block sizes via
+    ``kernels/autotune.tune`` under ``--tune-policy``: ``predict`` trusts
+    the analytical cost model (zero timing runs — the zoo cold-start
+    mode), ``verify`` (default) wall-clocks only the model's top-3
+    shortlist, ``sweep`` times the full candidate grid (and feeds the
+    model's training-data sidecar).
 
     **Fault tolerance** — each bucket runs through an
     ``ops.EngineLadder`` (factorized -> sparse -> dense-fused -> XLA
@@ -133,11 +137,13 @@ def serve_tm(args) -> None:
             return {}
         from repro.kernels import autotune
 
-        blocks = autotune.autotune_fused_blocks(
-            bucket, n_clauses, compiled.n_words_active,
-            compiled.n_classes, interpret=interpret,
+        blocks = autotune.tune(
+            "fused_infer", B=bucket, C=n_clauses,
+            W=compiled.n_words_active, K=compiled.n_classes,
+            interpret=interpret, policy=args.tune_policy,
         )
-        print(f"autotuned dense blocks (C={n_clauses}):", blocks)
+        print(f"autotuned dense blocks (C={n_clauses}, "
+              f"policy={args.tune_policy}):", blocks)
         return blocks
 
     def _tuned_ctx(inc_rows):
@@ -163,11 +169,17 @@ def serve_tm(args) -> None:
             return recorded
         from repro.kernels import autotune
 
-        blocks = autotune.autotune_sparse_infer_blocks(
-            bucket, compiled.n_classes, inc_rows, interpret=interpret,
+        blocks = autotune.tune(
+            "sparse_infer", B=bucket, K=compiled.n_classes,
+            include_words=inc_rows, interpret=interpret,
+            policy=args.tune_policy, features=compiled.features or None,
         )
-        compiled.record_tuned("sparse_infer", bucket, blocks, **ctx)
-        print(f"autotuned sparse blocks (U={inc_rows.shape[0]}):", blocks)
+        if args.tune_policy != "predict":
+            # measured tilings persist with the artifact; predictions are
+            # re-derived in microseconds and must not masquerade as sweeps
+            compiled.record_tuned("sparse_infer", bucket, blocks, **ctx)
+        print(f"autotuned sparse blocks (U={inc_rows.shape[0]}, "
+              f"policy={args.tune_policy}):", blocks)
         return blocks
 
     def tuned_factorized_blocks(inc_rows):
@@ -182,11 +194,15 @@ def serve_tm(args) -> None:
             return recorded
         from repro.kernels import autotune
 
-        blocks = autotune.autotune_term_infer_blocks(
-            bucket, compiled.n_classes, inc_rows, interpret=interpret,
+        blocks = autotune.tune(
+            "term_infer", B=bucket, K=compiled.n_classes,
+            include_words=inc_rows, interpret=interpret,
+            policy=args.tune_policy, features=compiled.features or None,
         )
-        compiled.record_tuned("term_infer", bucket, blocks, **ctx)
-        print(f"autotuned factorized blocks (U={inc_rows.shape[0]}):", blocks)
+        if args.tune_policy != "predict":
+            compiled.record_tuned("term_infer", bucket, blocks, **ctx)
+        print(f"autotuned factorized blocks (U={inc_rows.shape[0]}, "
+              f"policy={args.tune_policy}):", blocks)
         return blocks
 
     # donation recycles each bucket's literal buffer on accelerators
@@ -308,29 +324,27 @@ def serve_tm(args) -> None:
             blocks = tuned_factorized_blocks(compiled.include_words)
             return jax.jit(
                 lambda xw: compiler.run_compiled(
-                    compiled, xw, sparse=True, factorize=True,
+                    compiled, xw, engine="factorized",
                     **blocks).argmax(-1),
                 donate_argnums=donate)
         if name == "sparse":
             blocks = tuned_sparse_blocks(compiled.include_words)
             return jax.jit(
                 lambda xw: compiler.run_compiled(
-                    compiled, xw, sparse=True, factorize=False,
-                    **blocks).argmax(-1),
+                    compiled, xw, engine="sparse", **blocks).argmax(-1),
                 donate_argnums=donate)
         if name == "dense":
             blocks = tuned_blocks(compiled.n_unique)
             return jax.jit(
                 lambda xw: compiler.run_compiled(
-                    compiled, xw, sparse=False, factorize=False,
-                    **blocks).argmax(-1),
+                    compiled, xw, engine="dense", **blocks).argmax(-1),
                 donate_argnums=donate)
         # bottom of the ladder: pure-XLA oracle — no Pallas lowering, no
         # donation, so it survives whatever failure killed the kernels
         assert name == "oracle", name
         return jax.jit(
             lambda xw: compiler.run_compiled(
-                compiled, xw, use_kernel=False).argmax(-1))
+                compiled, xw, engine="oracle").argmax(-1))
 
     levels = []
     if use_kernel:
@@ -521,6 +535,13 @@ def main() -> None:
                     help="TM streaming bucket size (one jit trace per run)")
     ap.add_argument("--autotune", action="store_true",
                     help="autotune fused-kernel block sizes for the bucket shape")
+    ap.add_argument("--tune-policy", default="verify",
+                    choices=("predict", "verify", "sweep"),
+                    help="TM --autotune mode: 'predict' trusts the "
+                         "analytical cost model (zero timing runs), "
+                         "'verify' (default) wall-clocks only the model's "
+                         "top-3 shortlist, 'sweep' times every candidate "
+                         "and feeds the model's training-data sidecar")
     ap.add_argument("--no-sparse", action="store_true",
                     help="TM kernel path: serve the compiled artifact with "
                          "the dense fused kernel instead of the default "

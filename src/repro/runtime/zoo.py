@@ -120,6 +120,35 @@ class _Entry:
     evict_on_release: bool = False
 
 
+def artifact_loader(resolve_path: Callable[[str], str], *,
+                    batch: int = 64, interpret: Optional[bool] = None,
+                    policy: str = "predict") -> Callable:
+    """Build a zoo ``loader`` that cold-loads compiled-TM artifacts.
+
+    ``resolve_path(tenant)`` maps a tenant name to a ``save()``-produced
+    artifact path.  The loader validates + loads the ``CompiledTM`` and
+    asks ``kernels.autotune.plan_engine`` for an engine + block plan.
+    Under the default ``policy="predict"`` the plan comes purely from
+    the persisted feature vector and the analytical cost model — a cold
+    zoo load issues ZERO kernel timing runs.  Returns the ``(obj,
+    nbytes)`` pair the zoo expects, with ``obj`` a dict::
+
+        {"compiled": CompiledTM, "engine": str, "blocks": dict}
+    """
+    def load(tenant: str):
+        from repro.core import compiler
+        from repro.kernels import autotune
+
+        compiled = compiler.CompiledTM.load(resolve_path(tenant))
+        engine, blocks = autotune.plan_engine(
+            compiled, batch, interpret=interpret, policy=policy)
+        nbytes = (compiled.include_words.nbytes + compiled.word_ids.nbytes
+                  + compiled.votes.nbytes)
+        return {"compiled": compiled, "engine": engine,
+                "blocks": dict(blocks)}, nbytes
+    return load
+
+
 def _tenant_step(tenant: str) -> Optional[int]:
     """Trailing integer of a tenant name — lets ``zoo.load_fail@K`` target
     tenant ``...K`` specifically in multi-tenant drills."""

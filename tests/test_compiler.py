@@ -153,10 +153,12 @@ def test_kernel_path_equivalence():
     cfg, ta = _random_tm(100, 4, 16, 0.08, 3)
     comp = compiler.compile_tm(cfg, ta)
     x = jnp.asarray(np.random.default_rng(0).integers(0, 2, (12, 100), dtype=np.uint8))
-    a = compiler.predict_compiled(comp, x, use_kernel=False)
-    b = compiler.predict_compiled(comp, x, use_kernel=True, interpret=True)
-    c = compiler.predict_compiled(comp, x, use_kernel=True, interpret=True,
-                                  fuse=False)
+    a = compiler.predict_compiled(comp, x, engine="oracle")
+    b = compiler.predict_compiled(
+        comp, x, engine=compiler.EngineSpec(use_kernel=True), interpret=True)
+    c = compiler.predict_compiled(
+        comp, x, engine=compiler.EngineSpec(use_kernel=True, fuse=False),
+        interpret=True)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
@@ -174,7 +176,9 @@ def test_run_compiled_dispatch_defaults():
     )
     uk, it = ops.kernel_dispatch()
     default = compiler.run_compiled(comp, xp)
-    explicit = compiler.run_compiled(comp, xp, use_kernel=uk, interpret=it)
-    kernel = compiler.run_compiled(comp, xp, use_kernel=True, interpret=True)
+    explicit = compiler.run_compiled(
+        comp, xp, engine=compiler.EngineSpec(use_kernel=uk), interpret=it)
+    kernel = compiler.run_compiled(
+        comp, xp, engine=compiler.EngineSpec(use_kernel=True), interpret=True)
     np.testing.assert_array_equal(np.asarray(default), np.asarray(explicit))
     np.testing.assert_array_equal(np.asarray(default), np.asarray(kernel))

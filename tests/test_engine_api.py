@@ -1,0 +1,239 @@
+"""The unified engine/tuning API: EngineSpec dispatch on run_compiled,
+deprecation shims for the old boolean kwargs, the `autotune.tune` facade's
+three policies, and the zero-timing-run plan_engine cold-start path."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import compiler, packetizer, tm
+from repro.kernels import autotune, ops
+
+
+def _random_tm(n_features, n_classes, cpc, include_density, seed):
+    rng = np.random.default_rng(seed)
+    C = n_classes * cpc
+    ta = np.where(
+        rng.random((C, 2 * n_features)) < include_density,
+        rng.integers(0, 127, (C, 2 * n_features)),
+        rng.integers(-128, 0, (C, 2 * n_features)),
+    ).astype(np.int8)
+    cfg = tm.TMConfig(n_features=n_features, n_classes=n_classes,
+                      clauses_per_class=cpc)
+    return cfg, ta
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    cfg, ta = _random_tm(48, 3, 8, 0.10, 7)
+    comp = compiler.compile_tm(cfg, ta)
+    x = jnp.asarray(np.random.default_rng(1).integers(
+        0, 2, (11, 48), dtype=np.uint8))
+    return comp, packetizer.pack_literals(x)
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec
+# ---------------------------------------------------------------------------
+
+def test_engine_spec_validation():
+    with pytest.raises(ValueError, match="unknown engine"):
+        ops.EngineSpec(name="bogus")
+    with pytest.raises(ValueError, match="oracle"):
+        ops.EngineSpec(name="oracle", use_kernel=True)
+    with pytest.raises(ValueError, match="use_kernel=False"):
+        ops.EngineSpec(name="sparse", use_kernel=False)
+    with pytest.raises(ValueError, match="unfused"):
+        ops.EngineSpec(name="factorized", fuse=False)
+    # dense DOES have an unfused (two-kernel pipeline) form
+    ops.EngineSpec(name="dense", fuse=False)
+
+
+def test_engine_spec_coerce():
+    assert ops.EngineSpec.coerce(None) == ops.EngineSpec()
+    assert ops.EngineSpec.coerce("sparse").name == "sparse"
+    spec = ops.EngineSpec(name="dense", interpret=True)
+    assert ops.EngineSpec.coerce(spec) is spec
+    with pytest.raises(TypeError, match="EngineSpec"):
+        ops.EngineSpec.coerce(42)
+    with pytest.raises(ValueError, match="unknown engine"):
+        ops.EngineSpec.coerce("fastest")
+
+
+def test_engine_spec_resolve_interpret_precedence():
+    spec = ops.EngineSpec(name="sparse", interpret=False)
+    # call-site interpret wins over the spec's
+    assert spec.resolve(True)[1] is True
+    assert spec.resolve(None)[1] is False
+
+
+# ---------------------------------------------------------------------------
+# run_compiled engine dispatch
+# ---------------------------------------------------------------------------
+
+def test_all_named_engines_bit_identical(artifact):
+    comp, xp = artifact
+    oracle = np.asarray(compiler.run_compiled(comp, xp, engine="oracle"))
+    for name in ("factorized", "sparse", "dense", "auto"):
+        got = compiler.run_compiled(comp, xp, engine=name, interpret=True)
+        np.testing.assert_array_equal(oracle, np.asarray(got), err_msg=name)
+    spec = compiler.EngineSpec(name="dense", fuse=False, interpret=True)
+    np.testing.assert_array_equal(
+        oracle, np.asarray(compiler.run_compiled(comp, xp, engine=spec)))
+
+
+def test_deprecated_kwargs_warn_and_match(artifact):
+    """The legacy boolean kwargs still work — behind a DeprecationWarning —
+    and agree bit-for-bit with their EngineSpec replacements.  CI reruns
+    this test with ``-W error::DeprecationWarning`` to prove the warning
+    actually fires."""
+    comp, xp = artifact
+    with pytest.warns(DeprecationWarning, match="engine="):
+        legacy = compiler.run_compiled(
+            comp, xp, use_kernel=True, interpret=True,
+            sparse=True, factorize=False)
+    new = compiler.run_compiled(comp, xp, engine="sparse", interpret=True)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+    with pytest.warns(DeprecationWarning):
+        legacy = compiler.predict_compiled(comp, jnp.asarray(
+            np.random.default_rng(0).integers(0, 2, (5, 48), np.uint8)),
+            use_kernel=False)
+    assert legacy.shape == (5,)
+
+
+def test_engine_and_legacy_kwargs_conflict(artifact):
+    comp, xp = artifact
+    with pytest.raises(TypeError, match="deprecated"):
+        compiler.run_compiled(comp, xp, engine="sparse", use_kernel=True)
+
+
+# ---------------------------------------------------------------------------
+# sharding builders
+# ---------------------------------------------------------------------------
+
+def test_sharding_engine_dispatch_rules():
+    from repro.core import sharding
+
+    uk, it, fuse = sharding._engine_dispatch(
+        "dense", None, True, allowed=("auto", "dense", "oracle"))
+    assert (uk, it, fuse) == (True, True, True)
+    uk, it, fuse = sharding._engine_dispatch(
+        "oracle", None, None, allowed=("auto", "dense", "oracle"))
+    assert uk is False
+    with pytest.raises(ValueError, match="sparse"):
+        sharding._engine_dispatch(
+            "sparse", None, True, allowed=("auto", "dense", "oracle"))
+    with pytest.raises(TypeError, match="not both"):
+        sharding._engine_dispatch(
+            "dense", True, True, allowed=("auto", "dense", "oracle"))
+    # engine=None: plain passthrough to ambient kernel dispatch
+    uk, it, fuse = sharding._engine_dispatch(
+        None, True, True, allowed=("auto", "dense", "oracle"), fuse=False)
+    assert (uk, it, fuse) == (True, True, False)
+
+
+# ---------------------------------------------------------------------------
+# autotune.tune facade
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def tune_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    monkeypatch.setenv("REPRO_TUNE_DATA", str(tmp_path / "data.json"))
+    from repro.kernels import cost_model
+    cost_model._invalidate_model_cache()
+    yield tmp_path
+    cost_model._invalidate_model_cache()
+
+
+_CANDS = ((8, 128, 1), (4, 64, 1), (2, 32, 1), (8, 64, 1), (4, 128, 1))
+
+
+def test_tune_rejects_unknown(tune_env):
+    with pytest.raises(ValueError, match="unknown kernel"):
+        autotune.tune("warp_drive", B=1, C=1, W=1, K=1, interpret=True)
+    with pytest.raises(ValueError, match="unknown policy"):
+        autotune.tune("fused_infer", B=1, C=1, W=1, K=1, interpret=True,
+                      policy="guess")
+
+
+def test_predict_policy_zero_timing_runs(tune_env):
+    before = autotune.TIMING_RUNS
+    blocks = autotune.tune(
+        "fused_infer", B=9, C=17, W=1, K=2, interpret=True,
+        policy="predict", candidates=_CANDS)
+    assert autotune.TIMING_RUNS == before, "predict policy must not time"
+    assert set(blocks) == {"block_b", "block_c", "block_w"}
+    # memoized: second call (and a fresh process-cache miss) stays free
+    again = autotune.tune(
+        "fused_infer", B=9, C=17, W=1, K=2, interpret=True,
+        policy="predict", candidates=_CANDS)
+    assert again == blocks
+    assert autotune.TIMING_RUNS == before
+
+
+def test_verify_policy_times_only_topk(tune_env):
+    reps = 1
+    before = autotune.TIMING_RUNS
+    blocks = autotune.tune(
+        "fused_infer", B=9, C=17, W=1, K=2, interpret=True,
+        policy="verify", top_k=3, candidates=_CANDS, reps=reps)
+    spent = autotune.TIMING_RUNS - before
+    # <= top_k shortlisted candidates x (1 warmup + reps) each; the full
+    # 5-candidate sweep would have cost 5 x (1 + reps)
+    assert 0 < spent <= 3 * (1 + reps)
+    assert set(blocks) == {"block_b", "block_c", "block_w"}
+
+
+def test_sweep_policy_feeds_sidecar_and_shares_legacy_key(tune_env):
+    from repro.kernels import cost_model
+
+    cands = ((8, 128, 1), (4, 64, 1))
+    blocks = autotune.tune(
+        "fused_infer", B=9, C=17, W=1, K=2, interpret=True,
+        policy="sweep", candidates=cands, reps=1)
+    rows = cost_model.load_observations()
+    assert len(rows) == len(cands)
+    for row in rows:
+        assert row["kernel"] == "fused_infer"
+        assert row["measured_us"] > 0
+        assert row["basis"]["steps"] > 0
+    # the legacy wrapper answers from the SAME cache entry (no re-sweep)
+    before = autotune.TIMING_RUNS
+    legacy = autotune.autotune_fused_blocks(
+        9, 17, 1, 2, interpret=True, candidates=cands, reps=1)
+    assert legacy == blocks
+    assert autotune.TIMING_RUNS == before
+
+
+def test_plan_engine_cold_start(tune_env):
+    """plan_engine on a freshly loaded artifact: engine by the sharing
+    heuristic, tiling by the cost model, ZERO timing runs."""
+    cfg, ta = _random_tm(24, 2, 4, 0.08, 0)
+    comp = compiler.compile_tm(cfg, ta)
+    assert comp.stats.partial_term_sharing \
+        < compiler.FACTORIZE_SHARING_THRESHOLD
+    before = autotune.TIMING_RUNS
+    engine, blocks = autotune.plan_engine(comp, 32, interpret=True)
+    assert engine == "sparse"
+    assert set(blocks) == {"block_c", "block_j", "block_s"}
+    assert autotune.TIMING_RUNS == before
+
+    # high-sharing artifact routes factorized (same bank construction as
+    # the run_compiled heuristic test)
+    cfg2 = tm.TMConfig(n_features=64, n_classes=2, clauses_per_class=8)
+    C, L = 16, 128
+    ta2 = np.full((C, L), -5, np.int8)
+    ta2[:, 3] = 3
+    ta2[:, 40] = 3
+    for c in range(C):
+        ta2[c, 64 + ((c * 4) % 64)] = 3
+    comp2 = compiler.compile_tm(cfg2, ta2)
+    engine2, blocks2 = autotune.plan_engine(comp2, 32, interpret=True)
+    assert engine2 == "factorized"
+    assert "block_t" in blocks2
+    assert autotune.TIMING_RUNS == before

@@ -58,11 +58,10 @@ def _check_schedule_equals_dense(n_features, n_classes, cpc, density, seed,
     dense = tm.class_sums(cfg, jnp.asarray(ta), tm.literals(x),
                           training=False)
     xp = packetizer.pack_literals(x)
-    # factorize=False: these tests exist to cover the flat bit-chain
-    # kernel; the PR-5 heuristic would route high-sharing random banks to
-    # the factorized kernel and quietly drop that coverage
-    sp = compiler.run_compiled(comp, xp, use_kernel=True, interpret=True,
-                               sparse=True, factorize=False)
+    # engine="sparse" (not "auto"): these tests exist to cover the flat
+    # bit-chain kernel; the PR-5 heuristic would route high-sharing random
+    # banks to the factorized kernel and quietly drop that coverage
+    sp = compiler.run_compiled(comp, xp, engine="sparse", interpret=True)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
 
 
@@ -127,8 +126,9 @@ def test_empty_clause_only_model():
     assert comp.default_schedule.n_tiles == 0
     x = jnp.asarray(np.random.default_rng(0).integers(0, 2, (3, 8),
                                                       dtype=np.uint8))
-    sums = compiler.run_compiled(comp, packetizer.pack_literals(x),
-                                 use_kernel=True, interpret=True)
+    sums = compiler.run_compiled(
+        comp, packetizer.pack_literals(x),
+        engine=compiler.EngineSpec(use_kernel=True), interpret=True)
     np.testing.assert_array_equal(np.asarray(sums), 0)
 
 
@@ -139,8 +139,7 @@ def _check_schedule_equals_dense_state(cfg, ta, batch, seed):
     dense = tm.class_sums(cfg, jnp.asarray(ta), tm.literals(x),
                           training=False)
     sp = compiler.run_compiled(comp, packetizer.pack_literals(x),
-                               use_kernel=True, interpret=True,
-                               factorize=False)
+                               engine="sparse", interpret=True)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
 
 

@@ -62,10 +62,9 @@ def _check_factorized_equals_dense(n_features, n_classes, cpc, density,
     dense = tm.class_sums(cfg, jnp.asarray(ta), tm.literals(x),
                           training=False)
     xp = packetizer.pack_literals(x)
-    fact = compiler.run_compiled(comp, xp, use_kernel=True, interpret=True,
-                                 factorize=True, term_w=term_w)
-    flat = compiler.run_compiled(comp, xp, use_kernel=True, interpret=True,
-                                 factorize=False)
+    fact = compiler.run_compiled(comp, xp, engine="factorized",
+                                 interpret=True, term_w=term_w)
+    flat = compiler.run_compiled(comp, xp, engine="sparse", interpret=True)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(fact))
     np.testing.assert_array_equal(np.asarray(flat), np.asarray(fact))
 
@@ -157,8 +156,7 @@ def _check_state(cfg, ta, batch, seed, dedup=True):
     dense = tm.class_sums(cfg, jnp.asarray(ta), tm.literals(x),
                           training=False)
     sp = compiler.run_compiled(comp, packetizer.pack_literals(x),
-                               use_kernel=True, interpret=True,
-                               factorize=True)
+                               engine="factorized", interpret=True)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
 
 
@@ -257,7 +255,9 @@ def test_run_compiled_heuristic_default():
     x = jnp.asarray(np.random.default_rng(0).integers(0, 2, (9, 64),
                                                       dtype=np.uint8))
     xp = packetizer.pack_literals(x)
-    compiler.run_compiled(comp, xp, use_kernel=True, interpret=True)
+    compiler.run_compiled(comp, xp,
+                          engine=compiler.EngineSpec(use_kernel=True),
+                          interpret=True)
     assert comp._fschedules, "heuristic should have built the factorized " \
         "schedule"
     # a low-sharing artifact stays on the flat schedule
@@ -268,18 +268,22 @@ def test_run_compiled_heuristic_default():
     x2 = jnp.asarray(np.random.default_rng(1).integers(0, 2, (9, 24),
                                                        dtype=np.uint8))
     xp2 = packetizer.pack_literals(x2)
-    compiler.run_compiled(comp2, xp2, use_kernel=True, interpret=True)
+    compiler.run_compiled(comp2, xp2,
+                          engine=compiler.EngineSpec(use_kernel=True),
+                          interpret=True)
     assert not comp2._fschedules
     assert comp2._schedules
     # a factorized-only tiling key pins the factorized kernel even below
     # the sharing threshold (a tuned config is never silently dropped)...
-    compiler.run_compiled(comp2, xp2, use_kernel=True, interpret=True,
-                          term_w=2)
+    compiler.run_compiled(comp2, xp2,
+                          engine=compiler.EngineSpec(use_kernel=True),
+                          interpret=True, term_w=2)
     assert comp2._fschedules
-    # ... and an explicit factorize=False with such a key fails loudly
+    # ... and an explicitly non-factorized engine with such a key fails
+    # loudly
     with pytest.raises(TypeError, match="factorized-only"):
-        compiler.run_compiled(comp2, xp2, use_kernel=True, interpret=True,
-                              factorize=False, block_t=16)
+        compiler.run_compiled(comp2, xp2, engine="sparse", interpret=True,
+                              block_t=16)
 
 
 def test_stacked_shard_factorized_composes_exactly():
