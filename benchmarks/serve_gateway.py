@@ -19,7 +19,9 @@ tiny TM artifact served through the engine ladder:
 ``--chaos`` turns the same Poisson run into a fault drill: one injected
 fault per class (admission: ``gateway.queue_overflow``; zoo:
 ``zoo.load_fail@2`` targeting tenant t2; engine: ``kernel.dense`` demoting
-the ladder mid-stream) plus a real mid-stream SIGTERM that triggers the
+the ladder mid-stream), a mid-stream atomic hot-swap on tenant t0 (plus an
+injected ``zoo.swap_abort`` killing t1's swap pre-commit — t1 must keep
+serving version 1), and a real mid-stream SIGTERM that triggers the
 graceful drain.  The run then asserts the gateway's contract — every
 offered request was answered or shed with a typed reason (``unaccounted ==
 0``), the quarantined tenant's sheds are typed while healthy tenants keep
@@ -222,14 +224,41 @@ def run(rate: float = 1500.0, n: int = 1200, clients: int = 32,
 def chaos(rate: float = 1500.0, n: int = 1200) -> int:
     """Poisson run with one injected fault per class + mid-stream SIGTERM.
 
+    Also drills the hot-swap path mid-stream: tenant t0 gets a REAL
+    ``zoo.swap`` while its requests keep flowing (in-flight buckets finish
+    on the old version, later ones on the new — zero drops either way),
+    and tenant t1 gets a swap that the injected ``zoo.swap_abort`` site
+    kills before its commit point (t1 must keep serving version 1).
+
     Returns 0 when every gateway invariant holds, 1 otherwise.
     """
+    from repro.runtime.zoo import SwapAborted
+
     config, compiled = _build_compiled()
     xp = _requests(512, config)
     runner, ladder, zoo = _build_runner(compiled, BUCKET, xp.shape[1],
                                         warm=False)
+    nbytes = int(compiled.include_words.nbytes + compiled.votes.nbytes)
+    # prime t0 so the mid-stream swap bumps a LIVE entry (1 -> 2) instead
+    # of cold-installing version 1
+    with zoo.lease("t0"):
+        pass
+    swap_log: dict = {}
+
+    def midstream_swaps():
+        try:
+            swap_log["t0"] = zoo.swap("t0", ("t0-v2", nbytes), nbytes)
+        except Exception as e:           # pragma: no cover - drill fails
+            swap_log["t0_error"] = repr(e)
+        try:
+            zoo.swap("t1", ("t1-v2", nbytes), nbytes)
+            swap_log["t1_error"] = "swap committed despite zoo.swap_abort"
+        except SwapAborted:
+            swap_log["t1_aborted"] = True
 
     async def go():
+        # hot-swaps land ~20% through the arrivals, well before SIGTERM
+        threading.Timer(0.2 * n / rate, midstream_swaps).start()
         gw = await Gateway(runner, bucket=BUCKET, max_queue=512,
                            max_wait=0.005, drain_timeout=10.0).start()
         # SIGTERM lands mid-stream (~40% through the planned arrivals)
@@ -238,7 +267,7 @@ def chaos(rate: float = 1500.0, n: int = 1200) -> int:
             sigterm_after=0.4 * n / rate)
 
     with faults.injected("gateway.queue_overflow*5, zoo.load_fail@2*3, "
-                         "kernel.dense*1"):
+                         "kernel.dense*1, zoo.swap_abort@1*1"):
         responses, h, sigtermed = asyncio.run(go())
 
     failures = []
@@ -265,6 +294,24 @@ def chaos(rate: float = 1500.0, n: int = 1200) -> int:
         failures.append("SIGTERM was never delivered")
     if not h["draining"]:
         failures.append("SIGTERM did not put the gateway in drain")
+    zh = zoo.health()
+    if swap_log.get("t0") != 2:
+        failures.append(f"mid-stream hot-swap did not commit t0 at "
+                        f"version 2: {swap_log}")
+    if zoo.version("t0") != 2:
+        failures.append(f"t0 serves version {zoo.version('t0')}, not the "
+                        "swapped version 2")
+    if not swap_log.get("t1_aborted"):
+        failures.append(f"zoo.swap_abort@1 did not abort t1's swap: "
+                        f"{swap_log}")
+    if zh["swap_aborts"] != 1:
+        failures.append(f"expected exactly 1 swap abort, saw "
+                        f"{zh['swap_aborts']}")
+    if zoo.version("t1") not in (1, None):
+        failures.append(f"aborted swap left t1 half-promoted at version "
+                        f"{zoo.version('t1')}")
+    if h["tenants"].get("t0", {}).get("answered", 0) < 1:
+        failures.append("t0 stopped serving across its hot-swap")
 
     h["zoo"] = zoo.health()
     h["ladder"] = dict(final_engine=ladder.engine,

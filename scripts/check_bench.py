@@ -12,7 +12,10 @@ lead shape first) and exits non-zero when the fresh time exceeds
 ``factor`` x the committed baseline.  Serve-gateway reports
 (``BENCH_serve.json``, ``benchmark == "serve_gateway"``) gate their lead
 row on BOTH axes: fresh p99 latency above ``factor`` x baseline OR
-achieved req/s below baseline / ``factor`` fails.  The committed ``BENCH_*.json`` files
+achieved req/s below baseline / ``factor`` fails.  Online-update reports
+(``BENCH_online.json``, ``benchmark == "online_update"``) apply the same
+two-axis rule to the hot-swap pause (``swap_pause_p99_ms``) and the
+steady-state ``req_per_s`` under online updating.  The committed ``BENCH_*.json`` files
 are the cross-PR perf trajectory; this gate turns them from "diffable
 artifact" into an enforced floor — a PR that makes the kernels >2x slower
 in interpret mode fails CI instead of silently regressing the trajectory.
@@ -93,6 +96,47 @@ def _check_serve(baseline_path, fresh_path, base, fresh, factor) -> str:
     return f"ok: {verdict}"
 
 
+def lead_online_row(report: dict) -> dict | None:
+    """First online-update row: carries BOTH ``swap_pause_p99_ms`` (the
+    serving pause a hot-swap imposes) and ``req_per_s`` (steady-state
+    throughput under online updating) — benchmarks/online_update.py emits
+    the immediate-policy shape first."""
+    for row in report.get("rows", []):
+        if "swap_pause_p99_ms" in row and "req_per_s" in row:
+            return row
+    return None
+
+
+def _check_online(baseline_path, fresh_path, base, fresh, factor) -> str:
+    """Online-update rule (mirrors the serve-gateway rule): the hot-swap
+    pause may not grow AND steady-state throughput may not shrink by more
+    than ``factor``."""
+    b_row = lead_online_row(base)
+    f_row = lead_online_row(fresh)
+    if b_row is None:
+        raise RegressionError(
+            f"{baseline_path}: committed online baseline has no "
+            "swap_pause_p99_ms/req_per_s lead row — refresh the BENCH file")
+    if f_row is None:
+        raise RegressionError(
+            f"{fresh_path}: no online row — the online bench did not run")
+    b_pause = float(b_row["swap_pause_p99_ms"])
+    f_pause = float(f_row["swap_pause_p99_ms"])
+    b_rps, f_rps = float(b_row["req_per_s"]), float(f_row["req_per_s"])
+    verdict = (f"lead {b_row['name']}: swap pause p99 "
+               f"{b_pause:.2f}->{f_pause:.2f} ms, "
+               f"req/s {b_rps:.0f}->{f_rps:.0f}")
+    if b_pause > 0 and f_pause > factor * b_pause:
+        raise RegressionError(
+            f"{verdict} — swap pause exceeds the {factor:.1f}x "
+            "regression gate")
+    if b_rps > 0 and f_rps < b_rps / factor:
+        raise RegressionError(
+            f"{verdict} — throughput collapsed past the "
+            f"{factor:.1f}x regression gate")
+    return f"ok: {verdict}"
+
+
 def lead_predict_row(report: dict) -> dict | None:
     """First predict-policy row of an autotune_cost report — carries
     ``regret`` (vs the full swept optimum) and ``timing_runs``."""
@@ -161,6 +205,9 @@ def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
 
     if base.get("benchmark") == "serve_gateway":
         return _check_serve(baseline_path, fresh_path, base, fresh, factor)
+
+    if base.get("benchmark") == "online_update":
+        return _check_online(baseline_path, fresh_path, base, fresh, factor)
 
     if base.get("benchmark") == "autotune_cost":
         return _check_autotune(baseline_path, fresh_path, base, fresh)

@@ -64,6 +64,26 @@ def train_step_kernel(
 
 
 @functools.partial(jax.jit, static_argnums=0)
+def online_step(
+    config: tm.TMConfig, ta_state: jax.Array, x: jax.Array, y: jax.Array,
+    seed: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One streaming-feedback step on a RAW automata bank (hash RNG).
+
+    The online updater (``runtime/online.py``) steps a live bank beside a
+    serving loop: it feeds fixed-size feedback batches (one jit trace),
+    seeds by its own global step counter for reproducibility, and keeps
+    the previous bank un-donated — rollback and SIGTERM-drain
+    checkpointing both need the pre-step buffer intact.  Returns
+    ``(new_ta, delta_abs_sum)``.
+    """
+    from repro.kernels import ops
+
+    new_ta, delta = ops.tm_train_step_kernel(config, ta_state, x, y, seed)
+    return new_ta, jnp.sum(jnp.abs(delta))
+
+
+@functools.partial(jax.jit, static_argnums=0)
 def eval_step(
     config: tm.TMConfig, state: tm.TMState, x: jax.Array, y: jax.Array
 ) -> jax.Array:

@@ -197,6 +197,25 @@ class EngineLadder:
         self._cooldown = self.promote_after or 0
         return True
 
+    def rebind(self, engines) -> None:
+        """Swap in a new ``[(name, builder)]`` list (artifact hot-swap).
+
+        Built callables are discarded — they closed over the OLD
+        artifact's schedules — and rebuild lazily on next use, while the
+        ladder's health state (current level, streaks, telemetry) carries
+        over: a tenant demoted to a safe engine stays demoted across a
+        swap instead of re-crashing its way down the ladder.  The engine
+        names must match the existing ladder (the level index keeps its
+        meaning).
+        """
+        names = [name for name, _ in engines]
+        if names != self._names:
+            raise ValueError(
+                f"rebind: engine names {names} != ladder levels "
+                f"{self._names} — a swap must not reorder the ladder")
+        self._builders = dict(engines)
+        self._built = {}
+
     def _run_at(self, level, make_input):
         name = self._names[level]
         fn = self._built.get(name)

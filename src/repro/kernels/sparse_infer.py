@@ -254,6 +254,110 @@ def build_schedule(
     )
 
 
+def build_schedule_incremental(
+    include_words: np.ndarray,
+    prev: SparseSchedule,
+    prev_include_words: np.ndarray,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_j: int = DEFAULT_BLOCK_J,
+) -> tuple[SparseSchedule, dict]:
+    """Rebuild a chain schedule, reusing ``prev``'s chain rows where the
+    include bits did not move.
+
+    The expensive part of :func:`build_schedule` is the per-clause
+    ``nonzero`` loop that compacts include bits into literal-id chains;
+    online drift touches a small fraction of clauses, so rows whose packed
+    include words are identical to ``prev_include_words`` copy their chain
+    straight out of ``prev.chain_ids`` (sentinel padding is layout-
+    compatible because the literal space and tiling are checked first).
+    The tile table and CSR counts are always rebuilt — they are cheap and
+    depend on the global chain-length maximum.
+
+    Returns ``(schedule, info)`` where ``info`` reports ``rows_reused`` /
+    ``rows_rebuilt`` / ``tiles_reused`` (tiles of clause blocks with no
+    changed row).  The result is bit-exact against a from-scratch
+    :func:`build_schedule`; incompatible layouts (different row count,
+    word count, or effective tiling) fall back to the full build with
+    zero reuse.
+    """
+    iw = np.ascontiguousarray(np.asarray(include_words, dtype=np.uint32))
+    piw = np.ascontiguousarray(np.asarray(prev_include_words, dtype=np.uint32))
+    U, Wa = iw.shape
+    n_lit_bits = Wa * 32
+    eff_block_c = max(min(block_c, _rup(max(U, 1), 8)), 1)
+    if (piw.shape != iw.shape
+            or prev.block_c != eff_block_c or prev.block_j != block_j
+            or prev.n_rows != U or prev.n_lit_bits != n_lit_bits):
+        full = build_schedule(iw, block_c=block_c, block_j=block_j)
+        return full, dict(rows_reused=0, rows_rebuilt=U, tiles_reused=0)
+
+    Cp = _rup(max(U, 1), eff_block_c)
+    bits = np.zeros((Cp, n_lit_bits), np.uint8)
+    if U:
+        bits[:U] = packetizer.unpack_bits_np(iw, n_lit_bits)
+
+    n_cblocks = Cp // eff_block_c
+    counts = np.zeros(n_cblocks, np.int32)
+    per_clause = bits.sum(axis=1)
+    for b in range(n_cblocks):
+        j_max = int(per_clause[b * eff_block_c:(b + 1) * eff_block_c].max())
+        counts[b] = -(-j_max // block_j)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+    T_real = int(counts.sum())
+    T = T_real
+    n_jblocks = int(counts.max()) if T_real else 0
+    pad_jblock = n_jblocks if n_jblocks == 0 else None
+    if pad_jblock is not None:
+        n_jblocks += 1
+    Jp = n_jblocks * block_j
+
+    row_same = np.zeros(Cp, bool)
+    row_same[:U] = (iw == piw).all(axis=1)
+    row_same[U:] = True                  # padding rows are sentinel in both
+
+    width = max(Jp, block_j)
+    chain_ids = np.full((Cp, width), n_lit_bits, np.int32)
+    copy_w = min(width, prev.chain_ids.shape[1])
+    # a reused row's chain fits the new width: its include count bounds the
+    # new global j_max, and entries past the chain are sentinel either way
+    chain_ids[row_same, :copy_w] = prev.chain_ids[row_same, :copy_w]
+    for c in np.nonzero(~row_same)[0]:
+        (lids,) = np.nonzero(bits[c])
+        chain_ids[c, :lids.shape[0]] = lids
+
+    tile_cb = np.zeros(max(T, 1), np.int32)
+    tile_jb = np.zeros(max(T, 1), np.int32)
+    tile_first = np.zeros(max(T, 1), np.int32)
+    tile_last = np.zeros(max(T, 1), np.int32)
+    t = 0
+    for b in range(n_cblocks):
+        n = int(counts[b])
+        for j in range(n):
+            tile_cb[t], tile_jb[t] = b, j
+            tile_first[t] = int(j == 0)
+            tile_last[t] = int(j == n - 1)
+            t += 1
+
+    block_clean = row_same.reshape(n_cblocks, eff_block_c).all(axis=1)
+    sched = SparseSchedule(
+        block_c=eff_block_c, block_j=block_j, n_rows=U, n_lit_bits=n_lit_bits,
+        chain_ids=chain_ids,
+        tile_cb=tile_cb[:T] if T else tile_cb[:0],
+        tile_jb=tile_jb[:T] if T else tile_jb[:0],
+        tile_first=tile_first[:T] if T else tile_first[:0],
+        tile_last=tile_last[:T] if T else tile_last[:0],
+        counts=counts, indptr=indptr,
+    )
+    info = dict(
+        rows_reused=int(row_same[:U].sum()),
+        rows_rebuilt=int(U - row_same[:U].sum()),
+        tiles_reused=int(counts[block_clean].sum()),
+    )
+    return sched, info
+
+
 def bit_transpose_literals(lit_words: jax.Array, n_lit_bits: int) -> jax.Array:
     """(B, W) packed literal words -> (n_lit_bits + 1, ceil(B/32)) uint32.
 

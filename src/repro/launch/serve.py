@@ -15,6 +15,7 @@ import argparse
 import asyncio
 import itertools
 import signal
+import threading
 import time
 
 import jax
@@ -77,7 +78,14 @@ def serve_tm(args) -> None:
         # load check looks for the file save() actually wrote
         args.artifact += ".npz"
     trained_this_run = False
-    if args.artifact and os.path.exists(args.artifact):
+    state = None
+    if args.online and args.artifact and os.path.exists(args.artifact):
+        # the online updater trains a LIVE bank next to serving; a loaded
+        # artifact has no automata to train, so --online always takes the
+        # train path (the artifact is rewritten at exit as usual)
+        print(f"--online: training a live bank (artifact {args.artifact} "
+              "will be refreshed at exit)")
+    if args.artifact and os.path.exists(args.artifact) and not args.online:
         # cold-start fast path: the artifact ships its execution schedules
         # AND the tilings recorded by a previous --autotune run, so neither
         # the training loop nor the sweep is re-paid.  load() verifies
@@ -111,6 +119,14 @@ def serve_tm(args) -> None:
         trained_this_run = True
     tuned_at_start = dict(compiled.tuned)
     print("compile stats:", compiled.stats.as_dict())
+    if args.online and args.mesh:
+        raise SystemExit("--online hot-swaps the unsharded engine ladder; "
+                         "combine it with --mesh once the sharded builders "
+                         "read the swapped artifact")
+    # the serving artifact, as a mutable cell: the online updater promotes
+    # a successor by updating this and rebinding the ladder (built engines
+    # closed over the old artifact's schedules are discarded lazily)
+    current = {"compiled": compiled}
 
     bucket = args.bucket
     use_kernel, interpret = ops.kernel_dispatch()
@@ -317,34 +333,38 @@ def serve_tm(args) -> None:
 
     def build_engine(name):
         # lazy per-level builders: engines the ladder never reaches pay
-        # neither their jit trace nor their autotune sweep
+        # neither their jit trace nor their autotune sweep.  The serving
+        # artifact is read from the `current` cell at BUILD time, so a
+        # ladder.rebind() after an online hot-swap rebuilds against the
+        # promoted artifact.
+        art = current["compiled"]
         if name.startswith("mesh"):
             return build_mesh()
         if name == "factorized":
-            blocks = tuned_factorized_blocks(compiled.include_words)
+            blocks = tuned_factorized_blocks(art.include_words)
             return jax.jit(
                 lambda xw: compiler.run_compiled(
-                    compiled, xw, engine="factorized",
+                    art, xw, engine="factorized",
                     **blocks).argmax(-1),
                 donate_argnums=donate)
         if name == "sparse":
-            blocks = tuned_sparse_blocks(compiled.include_words)
+            blocks = tuned_sparse_blocks(art.include_words)
             return jax.jit(
                 lambda xw: compiler.run_compiled(
-                    compiled, xw, engine="sparse", **blocks).argmax(-1),
+                    art, xw, engine="sparse", **blocks).argmax(-1),
                 donate_argnums=donate)
         if name == "dense":
-            blocks = tuned_blocks(compiled.n_unique)
+            blocks = tuned_blocks(art.n_unique)
             return jax.jit(
                 lambda xw: compiler.run_compiled(
-                    compiled, xw, engine="dense", **blocks).argmax(-1),
+                    art, xw, engine="dense", **blocks).argmax(-1),
                 donate_argnums=donate)
         # bottom of the ladder: pure-XLA oracle — no Pallas lowering, no
         # donation, so it survives whatever failure killed the kernels
         assert name == "oracle", name
         return jax.jit(
             lambda xw: compiler.run_compiled(
-                compiled, xw, engine="oracle").argmax(-1))
+                art, xw, engine="oracle").argmax(-1))
 
     levels = []
     if use_kernel:
@@ -362,9 +382,11 @@ def serve_tm(args) -> None:
         [(name, (lambda n=name: build_engine(n))) for name in levels],
         promote_after=args.promote_after)
 
-    Xr, _ = make_boolean_classification(
+    Xr, yr = make_boolean_classification(
         args.requests, config.n_features, config.n_classes, seed=2
     )
+    # --online: the request stream's labels double as the labeled feedback
+    # stream (serve.py's stand-in for a production label joiner)
     xp = np.asarray(packetizer.pack_literals(jnp.asarray(Xr)))
     n, W = xp.shape
 
@@ -375,12 +397,14 @@ def serve_tm(args) -> None:
     ladder.run(lambda: jnp.asarray(xp[:bucket]), bucket="warm", count=False)
 
     bucket_i = itertools.count()
+    online_hooks = {"latency": None}   # filled when --online wires the updater
 
     def run_rows(rows):
         # one gateway bucket: zero-pad to the fixed jit trace shape (a
         # partial age/drain flush never retraces), run the engine ladder,
         # and keep the straggler/deadline accounting of the old sync loop
         i = next(bucket_i)
+        t_b = time.perf_counter()
         mon.start_step()
         faults.sleep_if("serve.slow_bucket", step=i)    # deadline drill site
         padded = np.zeros((bucket, W), xp.dtype)
@@ -395,10 +419,76 @@ def serve_tm(args) -> None:
                 f"bucket deadline: {flag['seconds'] * 1e3:.1f} ms > "
                 f"{args.bucket_deadline:g}x EWMA {flag['ewma'] * 1e3:.1f} ms",
                 bucket=i)
+        if online_hooks["latency"] is not None:
+            # post-swap latency watch: a promoted artifact that blows up
+            # bucket wall-time gets rolled back by the updater
+            online_hooks["latency"](time.perf_counter() - t_b)
         return preds
 
     zoo = None
-    if args.zoo:
+    updater = None
+    if args.online:
+        # online mode always routes through the zoo (one tenant unless
+        # --zoo): the updater's atomic hot-swap IS a zoo operation, and
+        # every bucket leases the entry it answers with, so in-flight
+        # buckets finish on the version they started on
+        from repro.runtime import online as online_mod
+        from repro.runtime.zoo import ArtifactZoo
+
+        def _nbytes(c):
+            return int(c.include_words.nbytes + c.word_ids.nbytes
+                       + c.votes.nbytes)
+
+        def make_obj(c):
+            # the zoo entry pairs the artifact with the shared ladder
+            # runner: leases pin the object (and thus its version); the
+            # ladder itself is rebound on promote via on_promote below
+            return {"compiled": c, "run": run_rows}, _nbytes(c)
+
+        zoo = ArtifactZoo(lambda tenant: make_obj(current["compiled"]),
+                          max_entries=max(args.zoo or 1, 1))
+        runner = zoo.runner(lambda obj, rows: obj["run"](rows))
+
+        def canary_serve(obj, rows):
+            # candidate side of the shadow canary: a standalone XLA-oracle
+            # runner per artifact (bit-identical predictions to every
+            # ladder engine), padded to the live trace shape so the
+            # candidate's jit warm-up happens HERE, not on its first
+            # post-swap bucket
+            fn = obj.get("_canary_fn")
+            if fn is None:
+                c = obj["compiled"]
+                fn = obj["_canary_fn"] = jax.jit(
+                    lambda xw: compiler.run_compiled(
+                        c, xw, engine="oracle").argmax(-1))
+            padded = np.zeros((bucket, W), xp.dtype)
+            padded[:len(rows)] = rows
+            return np.asarray(fn(jnp.asarray(padded)))[:len(rows)]
+
+        def on_promote(cand):
+            current["compiled"] = cand
+            ladder.rebind(
+                [(nm, (lambda n2=nm: build_engine(n2))) for nm in levels])
+            print(f"online: promoted artifact live (U={cand.n_unique}); "
+                  "engine ladder rebound")
+
+        ckpt_manager = None
+        if args.online_ckpt_dir:
+            from repro.checkpoint.store import CheckpointManager
+
+            ckpt_manager = CheckpointManager(args.online_ckpt_dir)
+        updater = online_mod.OnlineUpdater(
+            config, state.ta_state, compiled,
+            cfg=online_mod.OnlineConfig(
+                drift_threshold=args.drift_threshold,
+                canary_frac=args.canary_frac,
+                swap_policy=args.swap_policy),
+            zoo=zoo, tenant="t0", make_obj=make_obj, serve_fn=canary_serve,
+            deployed_obj={"compiled": compiled, "run": run_rows},
+            deployed_nbytes=_nbytes(compiled),
+            ckpt_manager=ckpt_manager, on_promote=on_promote)
+        online_hooks["latency"] = updater.record_bucket_latency
+    elif args.zoo:
         # multi-tenant mode: requests round-robin over --zoo tenants that
         # share the compiled engines but carry per-tenant circuit breakers;
         # max_entries < tenants keeps the LRU churning under real pressure
@@ -420,7 +510,8 @@ def serve_tm(args) -> None:
         gw = await Gateway(
             runner, bucket=bucket, max_queue=args.max_queue or None,
             max_wait=args.max_wait_ms / 1e3,
-            drain_timeout=args.drain_timeout).start()
+            drain_timeout=args.drain_timeout,
+            mirror=updater.mirror if updater is not None else None).start()
         loop = asyncio.get_running_loop()
         stop = asyncio.Event()
         try:
@@ -429,6 +520,29 @@ def serve_tm(args) -> None:
             loop.add_signal_handler(signal.SIGTERM, stop.set)
         except (NotImplementedError, RuntimeError):
             pass
+        stop_online = threading.Event()
+        online_thread = None
+        if updater is not None:
+            # the updater's own thread: ingest labeled feedback in batch-
+            # sized slices and train/drift-check between gateway buckets
+            feed = iter(range(n))
+
+            def online_loop():
+                while not stop_online.is_set():
+                    progressed = False
+                    for _ in range(updater.cfg.batch_size):
+                        j = next(feed, None)
+                        if j is None:
+                            break
+                        updater.ingest(Xr[j], int(yr[j]))
+                        progressed = True
+                    progressed = updater.step() or progressed
+                    if not progressed:
+                        time.sleep(0.002)
+
+            online_thread = threading.Thread(
+                target=online_loop, name="online-updater", daemon=True)
+            online_thread.start()
         deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
         futs = [gw.offer(tenant_of(j), xp[j], deadline=deadline)
                 for j in range(n)]
@@ -437,6 +551,17 @@ def serve_tm(args) -> None:
         await asyncio.wait({answered, sigterm},
                            return_when=asyncio.FIRST_COMPLETED)
         health = await gw.drain()
+        if online_thread is not None:
+            stop_online.set()
+            online_thread.join(timeout=10)
+        if updater is not None and stop.is_set():
+            # SIGTERM: after the gateway drains, flush the pending feedback
+            # queue through the PR-6 checkpoint path — a restarted updater
+            # resumes the bank and re-ingests every drained record
+            ck_step = updater.drain()
+            if ck_step is not None:
+                print(f"online: feedback queue drained to checkpoint "
+                      f"step {ck_step}")
         sigterm.cancel()
         return await answered, health, stop.is_set()
 
@@ -453,7 +578,8 @@ def serve_tm(args) -> None:
         # pure load with nothing new recorded skips the multi-MB rewrite.
         # Saved AFTER the stream so tilings recorded lazily by ladder
         # builders (when an engine first actually runs) persist too.
-        compiled.save(args.artifact)
+        # Under --online this is the PROMOTED artifact, not the boot one.
+        current["compiled"].save(args.artifact)
         print(f"saved artifact (schedules + tuned tilings) to {args.artifact}")
     engine_labels = {"factorized": "factorized-schedule",
                      "sparse": "sparse-schedule",
@@ -478,6 +604,8 @@ def serve_tm(args) -> None:
     if zoo is not None:
         gw_health["zoo"] = zoo.health()
     print("GATEWAY_HEALTH " + json.dumps(gw_health))
+    if updater is not None:
+        print("ONLINE_HEALTH " + json.dumps(updater.health()))
     if gw_health["unaccounted"]:
         raise SystemExit(
             f"gateway accounting violated: {gw_health['unaccounted']} "
@@ -582,6 +710,31 @@ def main() -> None:
                     help="TM gateway: serve this many round-robin tenants "
                          "through the artifact zoo (per-tenant circuit "
                          "breakers, LRU-capped cache) instead of one")
+    ap.add_argument("--online", action="store_true",
+                    help="TM: run the online-learning updater beside "
+                         "serving — stream labeled feedback into a live "
+                         "automata bank, rebuild on include-bit drift, "
+                         "shadow-canary the candidate on mirrored buckets, "
+                         "and hot-swap it atomically through the artifact "
+                         "zoo (zero dropped requests)")
+    ap.add_argument("--drift-threshold", type=float, default=0.05,
+                    help="TM --online: include-bit drift fraction (live "
+                         "bank vs the deployed artifact's bank) that arms "
+                         "an incremental recompile")
+    ap.add_argument("--canary-frac", type=float, default=0.25,
+                    help="TM --online: fraction of live buckets the "
+                         "gateway mirrors to the candidate during the "
+                         "shadow canary")
+    ap.add_argument("--swap-policy", default="canary",
+                    choices=("canary", "immediate"),
+                    help="TM --online: 'canary' (default) shadow-validates "
+                         "the candidate on mirrored traffic before the "
+                         "atomic swap; 'immediate' promotes as soon as the "
+                         "integrity envelope passes")
+    ap.add_argument("--online-ckpt-dir", default=None,
+                    help="TM --online: checkpoint directory the SIGTERM "
+                         "drain writes the live bank + pending feedback "
+                         "through (a restart resumes from it)")
     ap.add_argument("--artifact", default=None,
                     help="TM: compiled-artifact .npz path — loaded instead "
                          "of train+compile when it exists, (re)saved with "

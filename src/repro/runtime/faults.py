@@ -82,6 +82,19 @@ SITES = {
                      "failure loading a tenant's artifact (@step gates on "
                      "the tenant's trailing integer, e.g. zoo.load_fail@2 "
                      "targets tenant 't2' only)",
+    "zoo.swap_abort": "runtime/zoo.py hot-swap — dies after the candidate "
+                      "entry is prepared, before the atomic commit; the "
+                      "tenant must keep serving the OLD artifact intact "
+                      "(@step gates on the tenant's trailing integer)",
+    "online.rebuild_fail": "runtime/online.py incremental recompile — the "
+                           "candidate rebuild blows up (OOM / lowering "
+                           "failure); the updater must keep serving the "
+                           "deployed artifact and retry at the next drift "
+                           "check",
+    "online.feedback_corrupt": "runtime/online.py feedback ingest — "
+                               "corrupts a labeled feedback record before "
+                               "validation (label out of range); the "
+                               "updater must reject it, never train on it",
 }
 
 

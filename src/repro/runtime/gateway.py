@@ -28,6 +28,13 @@ to different tenants/models.  This gateway is the traffic-facing layer:
   ``engine_failed``.  One tenant's poisoned artifact therefore sheds THAT
   tenant's requests while other tenants keep flushing.
 
+* **Shadow mirror** — an optional ``mirror(tenant, rows, preds)`` tap
+  observes each successfully-answered bucket on the worker thread (the
+  online updater's shadow-canary: replay the bucket against a candidate
+  artifact and compare).  The tap is best-effort by construction: its
+  exceptions are swallowed and counted (``mirror_failures``), and it can
+  never shed or alter an answer.
+
 * **Graceful drain** — :meth:`drain` (wired to SIGTERM by the server)
   stops admission (``shutting_down``), flushes the remaining partial
   buckets under ``drain_timeout`` seconds, and rejects whatever is still
@@ -105,8 +112,16 @@ class Gateway:
 
     def __init__(self, runner: Callable, *, bucket: int = 128,
                  max_queue: Optional[int] = None, max_wait: float = 0.02,
-                 drain_timeout: float = 5.0, clock=time.monotonic):
+                 drain_timeout: float = 5.0, clock=time.monotonic,
+                 mirror: Optional[Callable] = None):
         self._runner = runner
+        # shadow-canary tap: ``mirror(tenant, rows, preds)`` observes a
+        # successfully-answered bucket (worker thread, AFTER the serving
+        # predictions are computed).  It must never affect the answer: any
+        # exception is swallowed and counted, never shed
+        self._mirror = mirror
+        self.mirrored = 0
+        self.mirror_failures = 0
         self.bucket = int(bucket)
         self.max_queue = max_queue if max_queue and max_queue > 0 else None
         self.max_wait = float(max_wait)
@@ -236,6 +251,23 @@ class Gateway:
             due = age_due if due is None else min(due, age_due)
         return None, due
 
+    def set_mirror(self, mirror: Optional[Callable]) -> None:
+        """Install/remove the shadow tap (safe while serving: the tap is
+        read once per bucket on the worker thread)."""
+        self._mirror = mirror
+
+    def _run_bucket(self, tenant: str, rows):
+        """Worker-thread bucket execution + best-effort shadow mirror."""
+        preds = self._runner(tenant, rows)
+        mirror = self._mirror
+        if mirror is not None:
+            try:
+                mirror(tenant, rows, preds)
+                self.mirrored += 1
+            except Exception:  # noqa: BLE001 — the tap must never shed
+                self.mirror_failures += 1
+        return preds
+
     async def _dispatch_loop(self) -> None:
         loop = asyncio.get_running_loop()
         while True:
@@ -260,7 +292,7 @@ class Gateway:
             self.buckets += 1
             try:
                 preds = await loop.run_in_executor(
-                    self._pool, self._runner, tenant,
+                    self._pool, self._run_bucket, tenant,
                     [r.x for r in reqs])
             except Exception as e:  # noqa: BLE001 — typed bucket rejection
                 reason = getattr(e, "shed_reason", ENGINE_FAILED)
@@ -336,6 +368,7 @@ class Gateway:
             buckets=self.buckets, bucket_size=self.bucket,
             flushes=dict(self.flushes),
             queue_depth=self._pending, draining=self._draining,
+            mirrored=self.mirrored, mirror_failures=self.mirror_failures,
             latency_ms=dict(p50=pct(50), p99=pct(99)),
             tenants={
                 t: dict(offered=row["offered"], answered=row["answered"],

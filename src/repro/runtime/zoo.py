@@ -15,6 +15,18 @@ memory at once.  The zoo is the tenant-facing model cache:
   eviction is DEFERRED: the entry is marked and dropped when its last
   lease is released, the in-flight bucket completes untouched.
 
+* **Atomic hot-swap** — :meth:`swap` promotes a new artifact version for
+  a tenant under the zoo lock with a single-assignment commit: in-flight
+  leases finish against the OLD version (the release path identity-checks
+  its entry, so draining leases never delete the successor), new
+  admissions route to the new one, and the gateway's
+  ``offered == answered + shed`` accounting never sees a gap.  The
+  ``zoo.swap_abort`` fault site fires between candidate preparation and
+  the commit — an aborted swap raises :class:`SwapAborted` and leaves the
+  old entry serving, bit-intact (drilled).  :meth:`trip` force-opens a
+  tenant's breaker, the rollback hook for a failed canary or a post-swap
+  regression.
+
 * **Per-tenant circuit breaker** — a tenant whose artifact repeatedly
   fails (load errors via the ``zoo.load_fail`` site, validation
   rejections, engine-ladder exhaustion reported through
@@ -36,6 +48,7 @@ import collections
 import contextlib
 import dataclasses
 import re
+import threading
 import time
 from typing import Callable, Dict, Optional
 
@@ -58,6 +71,10 @@ class TenantQuarantined(RuntimeError):
 class ArtifactLoadError(RuntimeError):
     """Loading/validating the tenant's artifact failed (typed shed)."""
     shed_reason = "load_failed"
+
+
+class SwapAborted(RuntimeError):
+    """Hot-swap died before its commit point; the old entry still serves."""
 
 
 class CircuitBreaker:
@@ -118,6 +135,7 @@ class _Entry:
     nbytes: int
     pins: int = 0
     evict_on_release: bool = False
+    version: int = 1                 # bumped by swap(); 1 = cold load
 
 
 def artifact_loader(resolve_path: Callable[[str], str], *,
@@ -175,11 +193,19 @@ class ArtifactZoo:
         self._entries: "collections.OrderedDict[str, _Entry]" = \
             collections.OrderedDict()
         self.breakers: Dict[str, CircuitBreaker] = {}
+        # reentrant: swap() and lease bookkeeping share _evict(); the lock
+        # makes the zoo safe to hot-swap from an updater thread while the
+        # gateway's worker thread leases (the loader itself runs under the
+        # lock — cold loads serialize, which is the safe default for a
+        # cache whose loads mutate shared autotune state)
+        self._lock = threading.RLock()
         self.loads = 0
         self.load_failures = 0
         self.evictions = 0
         self.deferred_evictions = 0
         self.quarantine_rejections = 0
+        self.swaps = 0
+        self.swap_aborts = 0
 
     # -- breaker plumbing ----------------------------------------------------
 
@@ -192,10 +218,22 @@ class ArtifactZoo:
     def record_fault(self, tenant: str) -> None:
         """Report a serving fault (e.g. engine-ladder exhaustion) against
         the tenant's breaker."""
-        self._breaker(tenant).record_failure()
+        with self._lock:
+            self._breaker(tenant).record_failure()
 
     def record_success(self, tenant: str) -> None:
-        self._breaker(tenant).record_success()
+        with self._lock:
+            self._breaker(tenant).record_success()
+
+    def trip(self, tenant: str) -> None:
+        """Force the tenant's breaker OPEN immediately — the rollback hook
+        for a failed canary or a post-swap regression.  New admissions
+        shed ``tenant_quarantined`` until the backoff expires (half-open
+        probe semantics apply as usual afterwards)."""
+        with self._lock:
+            br = self._breaker(tenant)
+            br.consecutive = max(br.consecutive, br.threshold)
+            br._open()
 
     # -- cache ---------------------------------------------------------------
 
@@ -271,19 +309,60 @@ class ArtifactZoo:
         only when the caller also reports :meth:`record_success` after
         the bucket actually serves.
         """
-        entry = self._get(tenant)
-        entry.pins += 1
-        # evict AFTER pinning: a freshly-loaded entry must not be the LRU
-        # scan's own victim before its first bucket runs
-        self._evict()
+        with self._lock:
+            entry = self._get(tenant)
+            entry.pins += 1
+            # evict AFTER pinning: a freshly-loaded entry must not be the
+            # LRU scan's own victim before its first bucket runs
+            self._evict()
         try:
             yield entry.obj
         finally:
-            entry.pins -= 1
-            if (entry.pins == 0 and entry.evict_on_release
-                    and self._entries.get(tenant) is entry):
-                del self._entries[tenant]
-                self.evictions += 1
+            with self._lock:
+                entry.pins -= 1
+                # identity check: after a swap() the tenant maps to the
+                # NEW entry — a draining lease on the old version must
+                # never delete its successor
+                if (entry.pins == 0 and entry.evict_on_release
+                        and self._entries.get(tenant) is entry):
+                    del self._entries[tenant]
+                    self.evictions += 1
+
+    def swap(self, tenant: str, obj: object, nbytes: int) -> int:
+        """Atomically promote ``obj`` as the tenant's serving artifact.
+
+        The new entry is prepared (version = old + 1), the
+        ``zoo.swap_abort`` fault site gets its shot (``@step`` gates on
+        the tenant's trailing integer), and only then does a SINGLE dict
+        assignment commit the promotion — there is no intermediate state
+        in which a lease can observe a half-promoted object.  In-flight
+        leases pinned to the old entry finish against the old object;
+        admissions after the commit route to the new one.  An abort
+        raises :class:`SwapAborted` and leaves the old entry serving,
+        untouched.  Returns the committed version number.
+        """
+        with self._lock:
+            old = self._entries.get(tenant)
+            entry = _Entry(tenant=tenant, obj=obj, nbytes=int(nbytes),
+                           version=(old.version + 1) if old else 1)
+            try:
+                faults.raise_if("zoo.swap_abort", step=_tenant_step(tenant))
+            except Exception as e:
+                self.swap_aborts += 1
+                raise SwapAborted(
+                    f"hot-swap for tenant {tenant!r} aborted before "
+                    f"commit: {e}") from e
+            self._entries[tenant] = entry         # the commit point
+            self._entries.move_to_end(tenant)
+            self.swaps += 1
+            self._evict()
+            return entry.version
+
+    def version(self, tenant: str) -> Optional[int]:
+        """Serving version of the tenant's entry (None when not loaded)."""
+        with self._lock:
+            entry = self._entries.get(tenant)
+            return entry.version if entry else None
 
     def runner(self, serve: Callable) -> Callable:
         """Gateway-runner adapter: ``serve(obj, rows) -> preds`` under a
@@ -300,15 +379,20 @@ class ArtifactZoo:
         return run
 
     def health(self) -> dict:
-        return dict(
-            entries=sorted(self._entries),
-            nbytes=self.nbytes, loads=self.loads,
-            load_failures=self.load_failures,
-            evictions=self.evictions,
-            deferred_evictions=self.deferred_evictions,
-            quarantine_rejections=self.quarantine_rejections,
-            breakers={t: dict(state=b.state, trips=b.trips,
-                              consecutive=b.consecutive)
-                      for t, b in self.breakers.items()
-                      if b.state != CLOSED or b.trips or b.consecutive},
-        )
+        with self._lock:
+            return dict(
+                entries=sorted(self._entries),
+                nbytes=self.nbytes, loads=self.loads,
+                load_failures=self.load_failures,
+                evictions=self.evictions,
+                deferred_evictions=self.deferred_evictions,
+                quarantine_rejections=self.quarantine_rejections,
+                swaps=self.swaps,
+                swap_aborts=self.swap_aborts,
+                versions={t: e.version for t, e in self._entries.items()
+                          if e.version > 1},
+                breakers={t: dict(state=b.state, trips=b.trips,
+                                  consecutive=b.consecutive)
+                          for t, b in self.breakers.items()
+                          if b.state != CLOSED or b.trips or b.consecutive},
+            )

@@ -152,6 +152,50 @@ def test_check_bench_serve_missing_rows_and_backend_skip(cb):
     assert mod.main(["--pair", f"{base}:{tpu}"]) == 0
 
 
+def _online_report(pause_ms, req_per_s, *, backend="cpu", interpret=True):
+    return dict(
+        benchmark="online_update", backend=backend,
+        interpret_mode=interpret,
+        rows=[
+            dict(name="online_steady_immediate_r1200_b64",
+                 us_per_call=pause_ms * 1e3, swap_pause_p99_ms=pause_ms,
+                 p99_ms=pause_ms * 8, req_per_s=req_per_s, derived=""),
+            dict(name="online_steady_canary_r1200_b64",
+                 us_per_call=pause_ms * 5e2, swap_pause_p99_ms=pause_ms / 2,
+                 p99_ms=pause_ms * 4, req_per_s=req_per_s * 2, derived=""),
+        ],
+    )
+
+
+def test_check_bench_gates_online_lead_row_both_axes(cb):
+    """BENCH_online.json gates on BOTH the hot-swap pause p99 and the
+    steady-state req/s under online updating: either axis regressing past
+    the factor fails (the injected-regression acceptance case)."""
+    mod, write = cb
+    base = write("b.json", _online_report(300.0, 400.0))
+    ok = write("f_ok.json", _online_report(450.0, 250.0))     # both < 2x
+    paused = write("f_paused.json", _online_report(750.0, 400.0))  # 2.5x
+    starved = write("f_starved.json", _online_report(300.0, 140.0))  # /2.8
+    assert mod.main(["--pair", f"{base}:{ok}"]) == 0
+    assert mod.main(["--pair", f"{base}:{paused}"]) == 1
+    assert mod.main(["--pair", f"{base}:{starved}"]) == 1
+
+
+def test_check_bench_online_missing_rows_and_backend_skip(cb):
+    """Online pairs keep the file semantics of the other gates: a leadless
+    fresh or baseline fails, a cross-backend comparison skips."""
+    mod, write = cb
+    base = write("b.json", _online_report(300.0, 400.0))
+    leadless = write("leadless.json", dict(
+        benchmark="online_update", backend="cpu", interpret_mode=True,
+        rows=[dict(name="online_steady", us_per_call=1.0, derived="")]))
+    assert mod.main(["--pair", f"{base}:{leadless}"]) == 1
+    assert mod.main(["--pair", f"{leadless}:{base}"]) == 1
+    tpu = write("tpu.json", _online_report(9000.0, 1.0, backend="tpu",
+                                           interpret=False))
+    assert mod.main(["--pair", f"{base}:{tpu}"]) == 0
+
+
 def test_check_bench_skips_cross_backend_comparison(cb):
     """TPU fresh numbers never gate against a CPU-interpret baseline."""
     mod, write = cb

@@ -1,0 +1,422 @@
+"""Online-learning service: drift math, incremental recompile exactness,
+feedback hygiene, rebuild/swap fault drills, the shadow-canary verdict,
+post-swap rollback, the SIGTERM feedback drain, and the end-to-end
+serve -> feedback -> drift -> recompile -> canary -> atomic-swap
+acceptance drill through the gateway.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import compiler, packetizer, tm
+from repro.runtime import faults
+from repro.runtime.online import (
+    CANARY, IDLE, FeedbackQueue, OnlineConfig, OnlineUpdater,
+)
+from repro.runtime.zoo import OPEN, ArtifactZoo, TenantQuarantined
+
+pytestmark = pytest.mark.online
+
+CFG = tm.TMConfig(n_features=16, n_classes=3, clauses_per_class=4,
+                  threshold=8, s=4.0)
+
+
+def _bank(seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-60, 20, size=(CFG.n_clauses_raw, CFG.n_literals),
+                        ).astype(np.int8)
+
+
+def _data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, size=(n, CFG.n_features)).astype(np.uint8)
+    y = rng.integers(0, CFG.n_classes, size=n).astype(np.int32)
+    return X, y
+
+
+def _pack(X):
+    lits = np.concatenate([X, 1 - X], axis=1).astype(np.uint8)
+    return packetizer.pack_bits_np(lits)
+
+
+def _sched_equal(a, b):
+    for f in ("block_c", "block_j", "n_rows", "n_lit_bits"):
+        assert getattr(a, f) == getattr(b, f), f
+    for f in ("chain_ids", "tile_cb", "tile_jb", "tile_first", "tile_last",
+              "counts", "indptr"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+# -- drift math ---------------------------------------------------------------
+
+def test_include_drift_counts_flipped_bits():
+    ta = np.full((CFG.n_clauses_raw, CFG.n_literals), -10, np.int8)
+    ta[:, 0] = 10                      # every clause includes literal 0
+    ref = compiler.dense_include_words(CFG, ta)
+    live = ta.copy()
+    live[0, 1] = 10                    # one new include ...
+    live[1, 0] = -10                   # ... one dropped include
+    d = compiler.include_drift(ref, compiler.dense_include_words(CFG, live))
+    assert d.n_bits_changed == 2 and d.n_clauses_changed == 2
+    assert d.n_includes_ref == CFG.n_clauses_raw
+    assert d.n_includes_live == CFG.n_clauses_raw
+    assert d.drift == pytest.approx(2 / CFG.n_clauses_raw)
+    assert d.as_dict()["drift"] == d.drift
+    # an unchanged bank reads exactly 0.0
+    assert compiler.include_drift(ref, ref).drift == 0.0
+
+
+def test_include_drift_shape_mismatch_is_loud():
+    ta = _bank()
+    ref = compiler.dense_include_words(CFG, ta)
+    with pytest.raises(ValueError):
+        compiler.include_drift(ref[:1], ref)
+
+
+# -- incremental recompile ----------------------------------------------------
+
+def test_incremental_recompile_bit_exact_vs_full():
+    ta = _bank()
+    prev = compiler.compile_tm(CFG, ta)
+    prev.schedule()                    # materialize the default tiling
+    prev.tuned["sparse_infer:B64"] = {"block_c": 8}
+    live = ta.copy()
+    # guaranteed include-bit flips on two clauses (int8-safe)
+    live[3, :4] = np.where(live[3, :4] >= 0, -50, 50)
+    live[7, 2:5] = np.where(live[7, 2:5] >= 0, -50, 50)
+    new, info = compiler.incremental_recompile(CFG, live, prev)
+    ref = compiler.compile_tm(CFG, live)
+    assert np.array_equal(new.include_words, ref.include_words)
+    assert np.array_equal(new.word_ids, ref.word_ids)
+    assert np.array_equal(new.votes, ref.votes)
+    if info["mode"] == "incremental":
+        # the reused-rows schedule must be EXACTLY the from-scratch one
+        _sched_equal(new.schedule(), ref.schedule())
+        # tuned tilings carry over to the same-layout successor
+        assert new.tuned["sparse_infer:B64"] == {"block_c": 8}
+    else:
+        assert info == dict(mode="full", rows_reused=0, tiles_reused=0)
+    # either way predictions are identical
+    xw = _pack(_data(8)[0])
+    a = np.asarray(compiler.run_compiled(new, xw, engine="oracle"))
+    b = np.asarray(compiler.run_compiled(ref, xw, engine="oracle"))
+    assert np.array_equal(a, b)
+
+
+def test_incremental_recompile_falls_back_on_layout_change():
+    ta = _bank()
+    prev = compiler.compile_tm(CFG, ta)
+    prev.schedule()
+    live = ta.copy()
+    live[:, :] = np.abs(live)          # everything includes: layout changes
+    new, info = compiler.incremental_recompile(CFG, live, prev)
+    assert info["mode"] == "full"
+    ref = compiler.compile_tm(CFG, live)
+    assert np.array_equal(new.include_words, ref.include_words)
+
+
+def test_build_schedule_incremental_reuses_clean_tiles():
+    from repro.kernels import sparse_infer
+
+    rng = np.random.default_rng(1)
+    iw = rng.integers(0, 2**32, size=(24, 2), dtype=np.uint32)
+    iw[iw.sum(axis=1) == 0, 0] = 1     # keep every row nonempty
+    prev = sparse_infer.build_schedule(iw, block_c=8, block_j=8)
+    live = iw.copy()
+    live[20] ^= 0b1011                 # touch only the LAST clause block
+    sched, info = sparse_infer.build_schedule_incremental(
+        live, prev, iw, block_c=8, block_j=8)
+    ref = sparse_infer.build_schedule(live, block_c=8, block_j=8)
+    _sched_equal(sched, ref)
+    assert info["rows_reused"] == 23 and info["rows_rebuilt"] == 1
+    # blocks 0 and 1 were untouched: their tiles count as reused
+    assert info["tiles_reused"] >= int(prev.counts[:2].sum()) > 0
+
+
+def test_build_schedule_incremental_falls_back_on_shape_change():
+    from repro.kernels import sparse_infer
+
+    rng = np.random.default_rng(2)
+    iw = rng.integers(1, 2**32, size=(16, 2), dtype=np.uint32)
+    prev = sparse_infer.build_schedule(iw, block_c=8, block_j=8)
+    live = rng.integers(1, 2**32, size=(24, 2), dtype=np.uint32)
+    sched, info = sparse_infer.build_schedule_incremental(
+        live, prev, iw, block_c=8, block_j=8)
+    assert info["rows_reused"] == 0 and info["tiles_reused"] == 0
+    _sched_equal(sched, sparse_infer.build_schedule(live, block_c=8,
+                                                    block_j=8))
+
+
+# -- feedback hygiene ---------------------------------------------------------
+
+def test_feedback_queue_overflow_is_counted():
+    q = FeedbackQueue(max_pending=2)
+    x = np.zeros(4, np.uint8)
+    assert q.put(x, 0) and q.put(x, 1)
+    assert not q.put(x, 2)             # typed drop, never silent
+    assert q.dropped_overflow == 1 and q.accepted == 2 and len(q) == 2
+    assert q.pop_batch(3) is None      # partial batches stay queued
+    xb, yb = q.pop_batch(2)
+    assert xb.shape == (2, 4) and list(yb) == [0, 1]
+
+
+def test_feedback_corrupt_drill_rejected_never_trained():
+    ta = _bank()
+    upd = OnlineUpdater(CFG, ta, compiler.compile_tm(CFG, ta),
+                        cfg=OnlineConfig(batch_size=4, drift_threshold=10.0))
+    X, y = _data(8)
+    with faults.injected("online.feedback_corrupt*1"):
+        assert not upd.ingest(X[0], y[0])    # corrupted BEFORE validation
+    assert upd.rejected_corrupt == 1 and len(upd.queue) == 0
+    assert not upd.ingest(np.zeros(3, np.uint8), 0)      # bad shape
+    assert not upd.ingest(X[0], CFG.n_classes)           # label range
+    assert upd.rejected_corrupt == 3 and upd.ingested == 0
+    for i in range(4):
+        assert upd.ingest(X[i], y[i])
+    assert upd.step()                   # the clean batch trains
+    assert upd.steps == 1 and upd.gstep == 1
+
+
+# -- rebuild + swap fault drills ----------------------------------------------
+
+def _mk_updater(ta, compiled, **cfg_kw):
+    """Updater over a real zoo with the entry primed at version 1."""
+    current = {"compiled": compiled}
+
+    def make_obj(c):
+        return {"compiled": c}, 1
+
+    zoo = ArtifactZoo(lambda t: make_obj(current["compiled"]))
+    with zoo.lease("t0"):
+        pass
+    cfg = OnlineConfig(**{**dict(drift_threshold=0.0, batch_size=4,
+                                 swap_policy="immediate"), **cfg_kw})
+    upd = OnlineUpdater(CFG, ta, compiled, cfg=cfg, zoo=zoo, tenant="t0",
+                        make_obj=make_obj,
+                        deployed_obj={"compiled": compiled},
+                        deployed_nbytes=1)
+    return upd, zoo
+
+
+def _feed_and_step(upd, seed):
+    X, y = _data(upd.cfg.batch_size, seed=seed)
+    for i in range(upd.cfg.batch_size):
+        upd.ingest(X[i], y[i])
+    assert upd.step()
+
+
+def test_rebuild_fail_drill_keeps_serving_then_retries():
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    upd, zoo = _mk_updater(ta, compiled)
+    with faults.injected("online.rebuild_fail*1"):
+        _feed_and_step(upd, seed=1)
+    assert upd.rebuild_failures == 1 and upd.rebuilds == 0
+    assert upd.promotions == 0
+    assert upd.deployed is compiled     # the deployed artifact never moved
+    assert zoo.version("t0") == 1
+    _feed_and_step(upd, seed=2)         # next drift check retries
+    assert upd.rebuilds == 1 and upd.promotions == 1
+    assert zoo.version("t0") == 2
+
+
+def test_swap_abort_drill_never_half_promotes():
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    orig_words = compiled.include_words.copy()
+    upd, zoo = _mk_updater(ta, compiled)
+    with faults.injected("zoo.swap_abort@0*1"):     # tenant t0 -> step 0
+        _feed_and_step(upd, seed=1)
+    assert upd.swap_aborts == 1 and upd.promotions == 0
+    assert zoo.version("t0") == 1                   # commit never happened
+    with zoo.lease("t0") as obj:
+        assert obj["compiled"] is compiled          # old object ...
+        assert np.array_equal(obj["compiled"].include_words, orig_words)
+    assert upd.state == IDLE                        # candidate discarded
+    _feed_and_step(upd, seed=2)                     # retry promotes cleanly
+    assert upd.promotions == 1 and zoo.version("t0") == 2
+
+
+# -- shadow canary ------------------------------------------------------------
+
+def test_failed_canary_discards_candidate_and_trips_breaker():
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    upd, zoo = _mk_updater(
+        ta, compiled, swap_policy="canary", canary_min=1, canary_frac=1.0)
+    # candidate side always disagrees with the serving predictions
+    upd.serve_fn = lambda obj, rows: np.full(len(rows), 0, np.int64)
+    _feed_and_step(upd, seed=1)
+    assert upd.state == CANARY
+    rows = list(_pack(_data(4, seed=9)[0]))
+    upd.mirror("t0", rows, np.full(len(rows), 1, np.int64))
+    assert upd.canary_failures == 1 and upd.promotions == 0
+    assert upd.state == IDLE and upd._candidate is None
+    assert zoo.version("t0") == 1                   # never swapped
+    assert zoo.breakers["t0"].state == OPEN         # breaker tripped
+    assert upd.deployed is compiled
+
+
+def test_canary_pass_promotes_and_mirror_ignores_other_tenants():
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    upd, zoo = _mk_updater(
+        ta, compiled, swap_policy="canary", canary_min=2, canary_frac=1.0)
+    _feed_and_step(upd, seed=1)
+    assert upd.state == CANARY
+    xw = _pack(_data(4, seed=9)[0])
+    agreeing = np.asarray(upd.serve_fn(upd._cand_obj, list(xw)))
+    upd.mirror("t9", list(xw), np.zeros(4, np.int64))   # wrong tenant
+    assert upd._canary_buckets == 0
+    upd.mirror("t0", list(xw), agreeing)
+    assert upd.state == CANARY                     # canary_min not reached
+    upd.mirror("t0", list(xw), agreeing)
+    assert upd.promotions == 1 and upd.canary_passes == 1
+    assert zoo.version("t0") == 2
+
+
+# -- post-swap rollback -------------------------------------------------------
+
+def test_post_swap_regression_rolls_back_bit_exact():
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    orig_words = compiled.include_words.copy()
+    upd, zoo = _mk_updater(ta, compiled, regression_window=2,
+                           regression_drop=0.2)
+
+    def feed_labeled(seed, truthful):
+        X, _ = _data(upd.cfg.batch_size, seed=seed)
+        preds = np.argmax(np.asarray(compiler.run_compiled(
+            upd.deployed, _pack(X))), axis=-1)
+        ys = preds if truthful else (preds + 1) % CFG.n_classes
+        for i in range(upd.cfg.batch_size):
+            upd.ingest(X[i], int(ys[i]))
+        assert upd.step()
+
+    feed_labeled(1, truthful=True)      # acc 1.0 window -> promote
+    assert upd.promotions == 1 and zoo.version("t0") == 2
+    upd.cfg.drift_threshold = 10.0      # freeze promotions; watch only
+    feed_labeled(2, truthful=False)     # deployed acc collapses to 0.0
+    feed_labeled(3, truthful=False)
+    assert len(upd.rollbacks) == 1
+    assert "accuracy regression" in upd.rollbacks[0]["reason"]
+    # the RETAINED pre-swap artifact is back, bit-exact, and the breaker
+    # is open so the regressed tenant cools down
+    assert upd.deployed is compiled
+    assert np.array_equal(upd.deployed.include_words, orig_words)
+    assert zoo.version("t0") == 3       # swap-back is itself an atomic swap
+    with pytest.raises(TenantQuarantined):
+        with zoo.lease("t0"):
+            pass
+
+
+def test_post_swap_rollback_is_idempotent():
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    upd, zoo = _mk_updater(ta, compiled)
+    _feed_and_step(upd, seed=1)
+    assert upd.promotions == 1
+    upd.rollback("manual")
+    n = zoo.health()["swaps"]
+    upd.rollback("again")               # no retained previous: no-op
+    assert len(upd.rollbacks) == 1 and zoo.health()["swaps"] == n
+
+
+# -- drain / resume -----------------------------------------------------------
+
+def test_drain_checkpoints_pending_feedback_and_resume_reingests(tmp_path):
+    from repro.checkpoint.store import CheckpointManager
+
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    upd = OnlineUpdater(CFG, ta, compiled,
+                        cfg=OnlineConfig(batch_size=4, drift_threshold=10.0),
+                        ckpt_manager=CheckpointManager(str(tmp_path)))
+    X, y = _data(6, seed=3)
+    for i in range(4):
+        upd.ingest(X[i], y[i])
+    assert upd.step()
+    for i in range(4, 6):               # partial batch stays pending
+        upd.ingest(X[i], y[i])
+    assert upd.drain() == 1 and len(upd.queue) == 0
+
+    # a restarted updater resumes the bank AND re-ingests the drained
+    # feedback — SIGTERM lost nothing
+    upd2 = OnlineUpdater(CFG, _bank(seed=99), compiled,
+                         cfg=OnlineConfig(batch_size=4,
+                                          drift_threshold=10.0),
+                         ckpt_manager=CheckpointManager(str(tmp_path)))
+    assert upd2.gstep == 1 and len(upd2.queue) == 2
+    assert np.array_equal(upd2._ta, upd._ta)       # bank bit-exact
+    for i in range(2):                  # top up to a full batch: it trains
+        upd2.ingest(X[i], y[i])
+    assert upd2.step() and upd2.gstep == 2
+
+
+# -- end to end through the gateway -------------------------------------------
+
+def test_end_to_end_drift_canary_swap_through_gateway():
+    """The acceptance drill: serve under load -> labeled feedback -> drift
+    crossing -> recompile -> shadow canary on mirrored buckets -> atomic
+    swap — with ``offered == answered + shed`` intact and every bucket
+    answered by a fully-committed artifact (never a half-promoted one)."""
+    from repro.runtime.gateway import Gateway
+
+    ta = _bank()
+    compiled = compiler.compile_tm(CFG, ta)
+    compiled.schedule()                 # give the incremental path its shot
+    current = {"compiled": compiled}
+    served_ids = []
+
+    def serve_rows(obj, rows):
+        served_ids.append(id(obj["compiled"]))
+        xw = np.stack([np.asarray(r) for r in rows])
+        return np.argmax(np.asarray(compiler.run_compiled(
+            obj["compiled"], xw, engine="oracle")), axis=-1)
+
+    def make_obj(c):
+        return {"compiled": c}, 1
+
+    zoo = ArtifactZoo(lambda t: make_obj(current["compiled"]))
+    runner = zoo.runner(serve_rows)
+    upd = OnlineUpdater(
+        CFG, ta, compiled,
+        cfg=OnlineConfig(drift_threshold=0.0, batch_size=4,
+                         swap_policy="canary", canary_min=2,
+                         canary_frac=1.0, canary_agreement=0.0),
+        zoo=zoo, tenant="t0", make_obj=make_obj, serve_fn=serve_rows,
+        deployed_obj={"compiled": compiled}, deployed_nbytes=1)
+
+    X, y = _data(32, seed=5)
+    xw = _pack(X)
+
+    async def go():
+        gw = await Gateway(runner, bucket=4, max_wait=0.01,
+                           mirror=upd.mirror).start()
+
+        async def offer(lo, hi):
+            futs = [gw.offer("t0", xw[j]) for j in range(lo, hi)]
+            return await asyncio.gather(*futs)
+
+        r1 = await offer(0, 8)                      # version 1 serves
+        for i in range(4):                          # feedback -> drift
+            upd.ingest(X[i], int(y[i]))
+        assert upd.step() and upd.state == CANARY
+        assert upd.rebuilds == 1
+        r2 = await offer(8, 24)       # mirrored buckets decide the canary
+        r3 = await offer(24, 32)
+        h = await gw.drain()
+        return r1 + r2 + r3, h
+
+    res, h = asyncio.run(go())
+    assert upd.canary_passes == 1 and upd.promotions == 1
+    assert zoo.version("t0") == 2
+    assert h["unaccounted"] == 0 and h["answered"] == 32
+    assert h["mirrored"] >= 2 and h["mirror_failures"] == 0
+    assert all(r.ok for r in res)
+    # every bucket was served by a committed artifact: the original or the
+    # promoted candidate — nothing in between
+    assert set(served_ids) <= {id(compiled), id(upd.deployed)}
+    assert id(compiled) in served_ids and id(upd.deployed) in served_ids

@@ -14,7 +14,7 @@ from repro.runtime import faults
 from repro.runtime.gateway import Gateway
 from repro.runtime.zoo import (
     CLOSED, HALF_OPEN, OPEN, ArtifactLoadError, ArtifactZoo, CircuitBreaker,
-    TenantQuarantined,
+    SwapAborted, TenantQuarantined,
 )
 
 pytestmark = pytest.mark.gateway
@@ -130,6 +130,111 @@ def test_breaker_backoff_is_capped():
         clk.t = br.retry_at
         assert br.allow()
     assert br.retry_at - clk() <= 25.0
+
+
+def test_breaker_failed_half_open_probe_retrips_through_lease_path():
+    """The backoff-doubling unit test above, drilled through the zoo's
+    LEASE path: a half-open probe lease whose load fails must re-trip the
+    breaker with a doubled cooldown — not reset it."""
+    clk = Clock()
+    zoo, loaded = _mk_zoo(breaker_threshold=1, breaker_cooldown=10.0,
+                          clock=clk)
+    with faults.injected("zoo.load_fail*2"):
+        with pytest.raises(ArtifactLoadError):
+            with zoo.lease("t0"):
+                pass
+        br = zoo.breakers["t0"]
+        assert br.state == OPEN and br.retry_at == 10.0
+        with pytest.raises(TenantQuarantined):     # still cooling down
+            with zoo.lease("t0"):
+                pass
+        clk.advance(10.0)
+        with pytest.raises(ArtifactLoadError):     # half-open probe fails
+            with zoo.lease("t0"):
+                pass
+        assert br.state == OPEN
+        assert br.retry_at == clk() + 20.0         # doubled, not reset
+    clk.advance(20.0)
+    with zoo.lease("t0") as obj:                   # next probe heals
+        assert obj == "model:t0"
+    zoo.record_success("t0")
+    assert br.state == CLOSED and br.trips == 0
+    assert loaded == ["t0"]                        # only the healthy load ran
+
+
+def test_breaker_backoff_cap_through_lease_path():
+    """max_cooldown bounds the lease-path backoff no matter how many
+    consecutive probes fail."""
+    clk = Clock()
+    zoo, _ = _mk_zoo(breaker_threshold=1, breaker_cooldown=10.0,
+                     breaker_max_cooldown=25.0, clock=clk)
+    with faults.injected("zoo.load_fail*5"):
+        with pytest.raises(ArtifactLoadError):
+            with zoo.lease("t0"):
+                pass
+        br = zoo.breakers["t0"]
+        for _ in range(4):                         # keep failing the probe
+            clk.t = br.retry_at
+            with pytest.raises(ArtifactLoadError):
+                with zoo.lease("t0"):
+                    pass
+            assert br.retry_at - clk() <= 25.0     # capped forever
+    clk.t = br.retry_at
+    with zoo.lease("t0"):                          # capped != stuck: heals
+        pass
+    zoo.record_success("t0")
+    assert br.state == CLOSED
+
+
+# -- atomic hot-swap ----------------------------------------------------------
+
+def test_swap_is_atomic_and_inflight_leases_finish_on_old_version():
+    zoo, _ = _mk_zoo()
+    with zoo.lease("t0") as obj:
+        assert obj == "model:t0" and zoo.version("t0") == 1
+        assert zoo.swap("t0", "model:t0-v2", 100) == 2
+        # the in-flight lease still holds the OLD object — a swap never
+        # mutates what a worker is serving from
+        assert obj == "model:t0"
+        # a lease admitted AFTER the commit gets the new version
+        with zoo.lease("t0") as obj2:
+            assert obj2 == "model:t0-v2"
+    # draining the old lease must not delete the successor entry
+    assert zoo.version("t0") == 2 and zoo.swaps == 1
+    assert zoo.health()["versions"] == {"t0": 2}
+
+
+def test_swap_abort_drill_leaves_old_entry_bit_intact():
+    zoo, loaded = _mk_zoo()
+    with zoo.lease("t0"):
+        pass
+    with faults.injected("zoo.swap_abort*1"):
+        with pytest.raises(SwapAborted):
+            zoo.swap("t0", "model:t0-v2", 100)
+    # nothing half-promoted: same object, same version, abort counted
+    assert zoo.version("t0") == 1
+    with zoo.lease("t0") as obj:
+        assert obj == "model:t0"
+    assert zoo.swap_aborts == 1 and zoo.swaps == 0
+    assert loaded == ["t0"]                        # never reloaded either
+    # the abort is transient: the retry commits
+    assert zoo.swap("t0", "model:t0-v2", 100) == 2
+
+
+def test_trip_force_opens_breaker_then_half_open_probe_admits():
+    clk = Clock()
+    zoo, _ = _mk_zoo(breaker_cooldown=10.0, clock=clk)
+    with zoo.lease("t0"):
+        pass
+    zoo.trip("t0")                                 # rollback hook
+    with pytest.raises(TenantQuarantined):
+        with zoo.lease("t0"):
+            pass
+    clk.advance(10.0)
+    with zoo.lease("t0") as obj:                   # half-open probe admits
+        assert obj == "model:t0"
+    zoo.record_success("t0")
+    assert zoo.breakers["t0"].state == CLOSED
 
 
 # -- load failures and quarantine --------------------------------------------
