@@ -1,0 +1,188 @@
+"""Anytime inference benchmark -> BENCH_anytime.json.
+
+    PYTHONPATH=src python -m benchmarks.anytime [--out BENCH_anytime.json]
+
+Measures the two anytime serving modes on a TRAINED edge-XL artifact (the
+same train+compile recipe as benchmarks/sparse_infer.py, so the margin
+table reflects a deployed model's vote-mass distribution, not a random
+bank):
+
+  * ``anytime_exact_ee_*`` [the lead row] — the exact early-exit kernel
+    mode: per-sample certification against the artifact's cumulative
+    margin table lets a slab stop folding tiles once every sample's lead
+    exceeds the residual swing.  Argmax is BIT-IDENTICAL to the full walk
+    (asserted here on every eval batch); the tracked quantity is the
+    speedup over the full schedule at identical answers.
+  * ``anytime_q{1..3}_*`` — the budgeted quality tiers (brownout levels):
+    each serves the margin-ordered tile PREFIX from
+    ``compiled.quality_levels()``, trading a concrete vote-margin error
+    bound for latency.  Rows carry ``accuracy`` (on held-out labeled
+    data), the reported ``bound``, and the REALIZED worst-case vote
+    deficit (asserted ``<= bound`` — the bench fails if the bound lies).
+  * ``anytime_full_*`` — the exact full-schedule baseline the other rows
+    are normalized against.
+
+Together the rows are the accuracy-vs-latency frontier the brownout
+controller walks under overload.  scripts/check_bench.py gates the report
+two-axis: the exact-early-exit row's ``us_per_call`` against the committed
+baseline factor, and each quality tier's ``accuracy`` against its
+committed baseline minus an absolute tolerance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.sparse_infer import (_TRAIN_SAMPLES, SHAPES, _time_isolated,
+                                     _train_artifact)
+from repro.core import compiler, packetizer
+from repro.data import make_boolean_classification
+from repro.kernels import autotune as _autotune
+from repro.kernels import ops
+
+# accuracy floor is enforced relative to the committed baseline by
+# scripts/check_bench.py (ANYTIME_ACC_TOL there); the bench itself only
+# asserts the HARD guarantees: exactness of early exit and bound soundness
+
+# Tile-granular tiling, PINNED rather than autotuned: the latency
+# autotuner happily picks block_c ~ C (2 tiles total), which makes every
+# quality prefix degenerate to the full walk and leaves early exit
+# nothing to skip.  The anytime frontier needs tiles as its currency.
+ANYTIME_BLOCKS = dict(block_c=256, block_j=32)
+
+
+def _frontier(comp, lit, y, levels, sblocks, interpret, reps):
+    """Time + score the full walk, exact early exit, and each budgeted
+    prefix; returns (times, sums-per-mode) with exactness asserted."""
+
+    def fwd(quality=0, early_exit=False):
+        jitted = jax.jit(lambda l: compiler.run_compiled(
+            comp, l, engine="sparse", quality=quality,
+            early_exit=early_exit, interpret=interpret, **sblocks))
+        return lambda: jitted(lit)
+
+    fns = {"full": fwd(), "exact_ee": fwd(early_exit=True)}
+    for q in levels:
+        if q["level"] > 0:
+            fns[f"q{q['level']}"] = fwd(quality=q["level"])
+    t = _time_isolated(fns, reps)
+    sums = {k: np.asarray(fn()) for k, fn in fns.items()}
+    # the exact mode's contract: truncated sums, identical argmax
+    np.testing.assert_array_equal(sums["full"].argmax(-1),
+                                  sums["exact_ee"].argmax(-1))
+    return t, sums
+
+
+def run(fast: bool = True, reps: int = 3) -> list:
+    _, interpret = ops.kernel_dispatch(True, None)
+    rows = []
+    for B, F, K, cpc in SHAPES[:1] if fast else SHAPES:
+        cfg, _, comp = _train_artifact(F, K, cpc)
+        W = comp.stats.n_words_dense
+        # held-out labeled eval set: SAME seed (same class prototypes as
+        # training — a different seed would be a different task and every
+        # tier would score chance), fresh sample draws (the longer request
+        # for n shifts the generator stream past the training set's X)
+        Xe, ye = make_boolean_classification(
+            _TRAIN_SAMPLES + B, F, K, prototype_density=0.05, seed=0)
+        Xe, ye = Xe[-B:], ye[-B:]
+        lit = jnp.asarray(packetizer.pack_literals(jnp.asarray(Xe)))
+
+        sblocks = dict(ANYTIME_BLOCKS)
+        levels = comp.quality_levels(
+            engine="sparse", block_c=sblocks.get("block_c"),
+            block_j=sblocks.get("block_j"))
+        t, sums = _frontier(comp, lit, ye, levels, sblocks, interpret, reps)
+
+        full = sums["full"]
+        pred_full = full.argmax(-1)
+        tag = f"b{B}_c{cfg.n_clauses_total}_w{W}_k{K}"
+        n_tiles_full = levels[0]["n_tiles"]
+
+        rows.append(dict(
+            name=f"anytime_exact_ee_{tag}",
+            us_per_call=t["exact_ee"] * 1e6,
+            accuracy=float((pred_full == ye).mean()),
+            level=0, bound=0,
+            speedup_vs_full=t["full"] / t["exact_ee"],
+            derived=(f"speedup_vs_full={t['full'] / t['exact_ee']:.2f}x;"
+                     f"argmax_identical=True;n_tiles={n_tiles_full};"
+                     + ";".join(f"{k}={v}" for k, v in sorted(
+                         sblocks.items()))),
+        ))
+        rows.append(dict(
+            name=f"anytime_full_{tag}",
+            us_per_call=t["full"] * 1e6,
+            accuracy=float((pred_full == ye).mean()),
+            level=0, bound=0,
+            derived=f"exact_full_walk;n_tiles={n_tiles_full}",
+        ))
+        for q in levels:
+            if q["level"] == 0:
+                continue
+            s_q = sums[f"q{q['level']}"]
+            pred_q = s_q.argmax(-1)
+            # realized deficit: how many votes the served class trails the
+            # true winner by, in EXACT sums — the quantity bound promises
+            deficit = full[np.arange(len(full)), pred_full] \
+                - full[np.arange(len(full)), pred_q]
+            realized = int(deficit.max())
+            assert realized <= q["bound"], (
+                f"q{q['level']}: realized deficit {realized} exceeds the "
+                f"reported bound {q['bound']}")
+            rows.append(dict(
+                name=f"anytime_q{q['level']}_{tag}",
+                us_per_call=t[f"q{q['level']}"] * 1e6,
+                accuracy=float((pred_q == ye).mean()),
+                level=q["level"], bound=q["bound"],
+                realized_err=realized,
+                derived=(f"n_tiles={q['n_tiles']}/{n_tiles_full};"
+                         f"frac={q['frac']};realized_err={realized};"
+                         f"agree_exact="
+                         f"{float((pred_q == pred_full).mean()):.4f}"),
+            ))
+    return rows
+
+
+def write_report(rows: list, path: str = "BENCH_anytime.json") -> None:
+    _, interpret = ops.kernel_dispatch(True, None)
+    report = dict(
+        benchmark="anytime",
+        backend=jax.default_backend(),
+        interpret_mode=bool(interpret),
+        jax_version=jax.__version__,
+        platform=platform.platform(),
+        autotune_cache=_autotune.cache_path(),
+        rows=rows,
+    )
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_anytime.json")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the paper-MNIST-width shape")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    t0 = time.time()
+    rows = run(fast=not args.full, reps=args.reps)
+    write_report(rows, args.out)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.3f},"
+              f"accuracy={r['accuracy']:.4f};{r['derived']}")
+    print(f"anytime bench wall: {time.time() - t0:.1f}s -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
     evaluated once per sample slab) vs the flat sparse schedule vs the
     dense kernel, + a synthetic sharing sweep (-> BENCH_term_infer.json;
     speedup scales with the artifact's term-sharing fraction)
+  * anytime_* — margin-ordered anytime inference on a trained artifact:
+    exact early-exit speedup + the budgeted quality-tier
+    accuracy-vs-latency frontier (-> BENCH_anytime.json; run as its own
+    CI job, recorded in BENCH_STATUS here)
   * roofline_* — per dry-run cell roofline terms (deliverable g)
 """
 
@@ -141,6 +145,10 @@ def main() -> int:
     # benchmarks/sharded_step.py needs its own process (forced device
     # count); it is a separate CI step, recorded here as such.
     status["sharded_step"] = "skipped (own process: python -m benchmarks.sharded_step)"
+    # benchmarks/anytime.py trains its own edge-XL artifact and is gated
+    # by the dedicated `anytime` CI job; re-running it here would double
+    # the train-and-time cost of the bench job.
+    status["anytime"] = "skipped (own CI job: python -m benchmarks.anytime)"
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -28,6 +28,18 @@ offered request was answered or shed with a typed reason (``unaccounted ==
 serving, and the drained process exits 0 — and exits non-zero on any
 violation.  CI runs this as the ``gateway`` job's acceptance drill.
 
+``--chaos`` additionally runs the BROWNOUT OVERLOAD drill: the same
+Poisson stream at ~2x the runner's modeled capacity, once with the
+brownout controller and once without.  The brownout run must shed
+STRICTLY fewer requests than the baseline (degrading quality buys real
+capacity), keep p99 under a hard cap, keep every quality tier's agreement
+with the exact predictions above a floor, and account for 100% of offered
+requests in both runs.  Two more sites are drilled alongside:
+``anytime.margin_corrupt`` (a tampered margin table must be REJECTED at
+artifact load, never served) and ``gateway.brownout_stuck`` (a wedged
+step-down path must be recovered by the controller's low-pressure
+watchdog).
+
 Rows carry ``us_per_call`` (= p99 latency, the gated scalar) plus explicit
 ``p99_ms`` / ``req_per_s`` fields; scripts/check_bench.py gates the lead
 row on BOTH (p99 regression or throughput collapse >2x fails).
@@ -55,7 +67,8 @@ from repro.core import compiler, packetizer, tm, train
 from repro.data import make_boolean_classification
 from repro.kernels import ops
 from repro.runtime import faults
-from repro.runtime.gateway import Gateway
+from repro.runtime.gateway import (BrownoutConfig, BrownoutController,
+                                   Gateway)
 from repro.runtime.zoo import ArtifactZoo
 
 TENANTS = ("t0", "t1", "t2")
@@ -317,13 +330,179 @@ def chaos(rate: float = 1500.0, n: int = 1200) -> int:
     h["ladder"] = dict(final_engine=ladder.engine,
                        demotions=ladder.demotions)
     print("GATEWAY_HEALTH " + json.dumps(h))
+
+    # brownout drills: overload (2x capacity, brownout vs baseline),
+    # tampered margin metadata, wedged step-down recovery
+    failures += overload_drill(config, compiled)
+    failures += margin_corrupt_drill(compiled)
+    failures += brownout_stuck_drill()
+
     if failures:
         for f in failures:
             print("CHAOS_FAIL " + f)
         return 1
     print(f"CHAOS_OK offered={h['offered']} answered={h['answered']} "
-          f"shed={h['shed']} (all typed, zero silent drops)")
+          f"shed={h['shed']} (all typed, zero silent drops; brownout "
+          "overload/margin-corrupt/stuck drills passed)")
     return 0
+
+
+# -- brownout overload drill -------------------------------------------------
+
+# tm-tiny at this tiling has ~80 schedule tiles, so the quality prefixes
+# actually truncate (the serving default of one giant tile would make
+# every tier identical to exact)
+_OVERLOAD_BLOCKS = dict(block_c=4, block_j=1)
+_P99_CAP_MS = 2000.0      # brownout p99 hard cap under 2x overload
+_AGREE_FLOOR = 0.9        # per-tier agreement with exact predictions
+
+
+def _build_anytime_runner(compiled, xp, base_service: float):
+    """Quality-aware gateway runner with a MODELED service time.
+
+    Per-tier predictions are precomputed on the canned request set with
+    the REAL budgeted kernels (the gateway serves genuine prefix answers
+    and their bounds); the worker then sleeps the modeled per-bucket
+    service time scaled by the tier's tile-prefix fraction — degrading
+    quality buys capacity exactly the way the tile walk does, and the
+    drill's capacity math stays deterministic on a noisy CI container.
+    """
+    levels = compiled.quality_levels(engine="sparse", **_OVERLOAD_BLOCKS)
+    n_full = levels[0]["n_tiles"]
+    lit = jnp.asarray(xp)
+    preds, frac, bound = {}, {}, {}
+    for q in levels:
+        lvl = q["level"]
+        sums = compiler.run_compiled(compiled, lit, engine="sparse",
+                                     quality=lvl, interpret=True,
+                                     **_OVERLOAD_BLOCKS)
+        preds[lvl] = np.asarray(sums.argmax(-1))
+        frac[lvl] = q["n_tiles"] / n_full
+        bound[lvl] = q["bound"]
+    idx = {xp[i].tobytes(): i for i in range(len(xp))}
+
+    def runner(tenant, rows, quality=0):
+        lvl = min(int(quality), max(preds))
+        out = np.array([preds[lvl][idx[np.asarray(r).tobytes()]]
+                        for r in rows])
+        time.sleep(base_service * frac[lvl])
+        return out, dict(quality=lvl,
+                         err_bound=bound[lvl] if lvl else None)
+
+    return runner, preds[0]
+
+
+def _run_overload(runner, xp, *, brownout: bool, rate: float, n: int,
+                  bucket: int):
+    async def go():
+        gw = await Gateway(
+            runner, bucket=bucket, max_queue=4 * bucket, max_wait=0.005,
+            drain_timeout=10.0,
+            brownout=BrownoutController() if brownout else None).start()
+        return await _drive(
+            gw, lambda futs: _open_loop(gw, xp, rate, n, 1.0, futs))
+
+    res, h, _ = asyncio.run(go())
+    return res, h
+
+
+def overload_drill(config, compiled, n: int = 1200, bucket: int = 16,
+                   base_service: float = 0.02) -> list:
+    """2x-capacity Poisson overload, brownout vs no-brownout baseline.
+
+    Returns the list of contract violations (empty = drill passed).
+    """
+    failures = []
+    xp = _requests(512, config)
+    runner, exact = _build_anytime_runner(compiled, xp, base_service)
+    rate = 2.0 * bucket / base_service      # 2x the exact-tier capacity
+    res_b, h_b = _run_overload(runner, xp, brownout=True, rate=rate,
+                               n=n, bucket=bucket)
+    res_0, h_0 = _run_overload(runner, xp, brownout=False, rate=rate,
+                               n=n, bucket=bucket)
+
+    for tag, res, h in (("brownout", res_b, h_b), ("baseline", res_0, h_0)):
+        if h["unaccounted"] != 0:
+            failures.append(f"{tag}: unaccounted != 0: {h['unaccounted']}")
+        if len(res) != h["offered"]:
+            failures.append(f"{tag}: {h['offered']} offered but "
+                            f"{len(res)} responses resolved")
+        untyped = [r for r in res if not r.ok and not r.reason]
+        if untyped:
+            failures.append(f"{tag}: {len(untyped)} sheds with no reason")
+
+    if h_b["shed_total"] >= h_0["shed_total"]:
+        failures.append(
+            f"brownout shed {h_b['shed_total']} >= baseline "
+            f"{h_0['shed_total']} — degrading bought no capacity")
+    p99 = h_b["latency_ms"]["p99"] or 0.0
+    if p99 > _P99_CAP_MS:
+        failures.append(f"brownout p99 {p99:.0f}ms over the "
+                        f"{_P99_CAP_MS:.0f}ms cap")
+    if h_b["answered_degraded"] < 1:
+        failures.append("brownout never served a degraded answer under "
+                        "2x overload")
+    if (h_b.get("brownout") or {}).get("escalations", 0) < 1:
+        failures.append("brownout controller never escalated")
+    for tier in sorted({r.quality for r in res_b if r.ok}):
+        hits = [int(r.pred == exact[j % len(xp)])
+                for j, r in enumerate(res_b) if r.ok and r.quality == tier]
+        agree = float(np.mean(hits))
+        if agree < _AGREE_FLOOR:
+            failures.append(f"tier {tier} agreement with exact "
+                            f"{agree:.3f} < {_AGREE_FLOOR} floor "
+                            f"({len(hits)} answers)")
+    bad = [r for r in res_b if r.ok and r.quality > 0 and r.err_bound is None]
+    if bad:
+        failures.append(f"{len(bad)} degraded answers carry no err_bound")
+
+    print("BROWNOUT_HEALTH " + json.dumps(dict(
+        offered_rate=rate, brownout=h_b,
+        baseline=dict(shed_total=h_0["shed_total"],
+                      answered=h_0["answered"],
+                      p99_ms=h_0["latency_ms"]["p99"]))))
+    return failures
+
+
+def margin_corrupt_drill(compiled) -> list:
+    """anytime.margin_corrupt: tampered margin metadata must be REJECTED
+    at load (validate_artifact's vote-table consistency check), and the
+    clean artifact must still load once the site disarms."""
+    import tempfile
+
+    failures = []
+    with tempfile.TemporaryDirectory(prefix="anytime_art_") as d:
+        path = compiled.save(os.path.join(d, "art.npz"))
+        with faults.injected("anytime.margin_corrupt"):
+            try:
+                compiler.CompiledTM.load(path)
+                failures.append("anytime.margin_corrupt: tampered margins "
+                                "were accepted at load")
+            except compiler.ArtifactError as e:
+                if "margin" not in str(e).lower():
+                    failures.append(
+                        f"margin tamper rejected with wrong error: {e}")
+        try:
+            compiler.CompiledTM.load(path)
+        except compiler.ArtifactError as e:
+            failures.append(f"clean artifact rejected after drill: {e}")
+    return failures
+
+
+def brownout_stuck_drill() -> list:
+    """gateway.brownout_stuck: with the primary step-down path wedged,
+    the low-pressure watchdog must still recover exact serving."""
+    failures = []
+    c = BrownoutController(BrownoutConfig(watchdog_evals=4))
+    with faults.injected("gateway.brownout_stuck*8"):
+        c.update(0.9)                  # escalate straight to level 3
+        for _ in range(4):
+            c.update(0.05)             # calm, but step-down is wedged
+    if c.level != 0 or c.watchdog_resets != 1:
+        failures.append(
+            f"brownout_stuck: watchdog did not recover (level={c.level}, "
+            f"watchdog_resets={c.watchdog_resets})")
+    return failures
 
 
 def write_report(rows: list, path: str = "BENCH_serve.json") -> None:

@@ -15,7 +15,12 @@ row on BOTH axes: fresh p99 latency above ``factor`` x baseline OR
 achieved req/s below baseline / ``factor`` fails.  Online-update reports
 (``BENCH_online.json``, ``benchmark == "online_update"``) apply the same
 two-axis rule to the hot-swap pause (``swap_pause_p99_ms``) and the
-steady-state ``req_per_s`` under online updating.  The committed ``BENCH_*.json`` files
+steady-state ``req_per_s`` under online updating.  Anytime reports
+(``BENCH_anytime.json``, ``benchmark == "anytime"``) gate two-axis as
+well: the exact-early-exit row's latency against ``factor`` x baseline,
+and every budgeted quality tier's accuracy against its committed
+baseline minus an absolute tolerance (the accuracy-vs-latency frontier
+must not silently collapse).  The committed ``BENCH_*.json`` files
 are the cross-PR perf trajectory; this gate turns them from "diffable
 artifact" into an enforced floor — a PR that makes the kernels >2x slower
 in interpret mode fails CI instead of silently regressing the trajectory.
@@ -137,6 +142,64 @@ def _check_online(baseline_path, fresh_path, base, fresh, factor) -> str:
     return f"ok: {verdict}"
 
 
+def lead_anytime_row(report: dict) -> dict | None:
+    """The exact-early-exit row of an anytime report: the gated scalar is
+    its ``us_per_call`` (argmax-identical answers, so latency is the whole
+    story for the exact mode)."""
+    for row in report.get("rows", []):
+        if "exact_ee" in row.get("name", "") and "us_per_call" in row:
+            return row
+    return None
+
+
+# absolute accuracy tolerance for the budgeted tiers: a quality level may
+# not lose more than this vs its committed baseline (accuracy is already
+# in [0, 1], so a relative factor would be meaningless near 1.0)
+ANYTIME_ACC_TOL = 0.02
+
+
+def _check_anytime(baseline_path, fresh_path, base, fresh, factor) -> str:
+    """Anytime rule, two-axis: the exact-early-exit row's latency may not
+    grow past ``factor`` x baseline, and EACH budgeted quality tier's
+    accuracy may not drop more than ``ANYTIME_ACC_TOL`` below its
+    committed baseline (the frontier must not silently collapse)."""
+    b_row = lead_anytime_row(base)
+    f_row = lead_anytime_row(fresh)
+    if b_row is None:
+        raise RegressionError(
+            f"{baseline_path}: committed anytime baseline has no exact_ee "
+            "row — refresh the BENCH file")
+    if f_row is None:
+        raise RegressionError(
+            f"{fresh_path}: no exact_ee row — the anytime bench did not run")
+    b_us, f_us = float(b_row["us_per_call"]), float(f_row["us_per_call"])
+    verdict = f"lead {b_row['name']}: {b_us:.0f}us -> {f_us:.0f}us"
+    if f_us > factor * b_us:
+        raise RegressionError(
+            f"{verdict} — exact early-exit latency exceeds the "
+            f"{factor:.1f}x regression gate")
+    base_acc = {r["name"]: float(r["accuracy"]) for r in base.get("rows", [])
+                if int(r.get("level", 0)) > 0 and "accuracy" in r}
+    fresh_acc = {r["name"]: float(r["accuracy"]) for r in fresh.get("rows", [])
+                 if int(r.get("level", 0)) > 0 and "accuracy" in r}
+    if not fresh_acc:
+        raise RegressionError(
+            f"{fresh_path}: no budgeted quality rows — the frontier is gone")
+    drops = []
+    for name, b_acc in base_acc.items():
+        f_acc = fresh_acc.get(name)
+        if f_acc is None:
+            drops.append(f"{name}: row missing from fresh report")
+        elif f_acc < b_acc - ANYTIME_ACC_TOL:
+            drops.append(f"{name}: accuracy {b_acc:.4f} -> {f_acc:.4f}")
+    if drops:
+        raise RegressionError(
+            f"{verdict}; quality-tier accuracy regressed past the "
+            f"{ANYTIME_ACC_TOL} tolerance: " + "; ".join(drops))
+    return (f"ok: {verdict}; {len(fresh_acc)} quality tiers within "
+            f"{ANYTIME_ACC_TOL} of baseline accuracy")
+
+
 def lead_predict_row(report: dict) -> dict | None:
     """First predict-policy row of an autotune_cost report — carries
     ``regret`` (vs the full swept optimum) and ``timing_runs``."""
@@ -211,6 +274,9 @@ def check_pair(baseline_path: str, fresh_path: str, factor: float) -> str:
 
     if base.get("benchmark") == "autotune_cost":
         return _check_autotune(baseline_path, fresh_path, base, fresh)
+
+    if base.get("benchmark") == "anytime":
+        return _check_anytime(baseline_path, fresh_path, base, fresh, factor)
 
     b_row = lead_fused_row(base)
     f_row = lead_fused_row(fresh)

@@ -44,6 +44,8 @@ import dataclasses
 import hashlib
 import json
 import os
+import struct
+import zipfile
 from typing import Optional
 
 import jax.numpy as jnp
@@ -62,7 +64,7 @@ FACTORIZE_SHARING_THRESHOLD = 0.30
 # tag + content checksum, saved atomically); version-0 artifacts (no tag)
 # predate it and are REJECTED at load — an unverifiable artifact must be
 # recompiled, not served on trust.
-ARTIFACT_SCHEMA_VERSION = 1
+ARTIFACT_SCHEMA_VERSION = 2   # v2: per-tile-prefix anytime margin metadata
 
 
 class ArtifactError(RuntimeError):
@@ -92,6 +94,30 @@ def _artifact_checksum(arrays: dict, meta: dict) -> str:
         h.update(a.tobytes())
     h.update(json.dumps(meta, sort_keys=True).encode())
     return h.hexdigest()
+
+
+def _payload_offset(path: str) -> Optional[int]:
+    """Byte offset of real member payload inside the saved npz.
+
+    The bit-rot drill (``artifact.bitflip``) flips one byte of the file;
+    aiming at the middle of the *largest member's compressed data* keeps
+    the drill meaningful regardless of how the zip layout shifts between
+    schema versions — a flip at a naive ``size // 2`` can land in a local
+    file header's redundant csize/crc fields, which zipfile never reads
+    (it trusts the central directory), so the "corrupt" artifact would
+    load cleanly and the drill would assert nothing.
+    """
+    try:
+        with zipfile.ZipFile(path) as zf:
+            info = max(zf.infolist(), key=lambda zi: zi.compress_size)
+            with open(path, "rb") as f:
+                # local header: fnlen @ +26, extralen @ +28 (little-endian)
+                f.seek(info.header_offset + 26)
+                fnlen, extralen = struct.unpack("<HH", f.read(4))
+            data_start = info.header_offset + 30 + fnlen + extralen
+            return data_start + info.compress_size // 2
+    except Exception:
+        return None
 
 
 @dataclasses.dataclass
@@ -218,6 +244,13 @@ class CompiledTM:
     stats: CompileStats
     _schedules: dict = dataclasses.field(default_factory=dict, repr=False)
     _fschedules: dict = dataclasses.field(default_factory=dict, repr=False)
+    # anytime-inference metadata (kernels/anytime.py): per-tile-prefix
+    # residual-swing margins, keyed like the schedule memos; quality-level
+    # prefix schedules keyed (engine, schedule key, level)
+    _margins: dict = dataclasses.field(default_factory=dict, repr=False)
+    _fmargins: dict = dataclasses.field(default_factory=dict, repr=False)
+    _prefix_schedules: dict = dataclasses.field(default_factory=dict,
+                                                repr=False)
     # autotuned kernel tilings recorded against this artifact (keyed
     # "<kernel>:B<bucket>"), shipped by save() so a cold-start server loads
     # a tuned schedule instead of re-paying the sweep
@@ -282,6 +315,81 @@ class CompiledTM:
     @property
     def default_factorized_schedule(self):
         return self.factorized_schedule()
+
+    def tile_margins(self, block_c: int | None = None,
+                     block_j: int | None = None) -> np.ndarray:
+        """(T,) residual-swing margin table for the sparse chain schedule
+        at the given tiling (``kernels/anytime.py``), memoized; loaded
+        artifacts ship the default-tiling table verbatim."""
+        from repro.kernels import anytime, sparse_infer
+
+        key = (
+            block_c or sparse_infer.DEFAULT_BLOCK_C,
+            block_j or sparse_infer.DEFAULT_BLOCK_J,
+        )
+        if key not in self._margins:
+            self._margins[key] = anytime.sparse_tile_margins(
+                self.schedule(*key), self.votes)
+        return self._margins[key]
+
+    def factorized_tile_margins(self, block_c: int | None = None,
+                                block_j: int | None = None,
+                                block_t: int | None = None,
+                                term_w: int | None = None) -> np.ndarray:
+        """(T,) residual-swing margin table for the factorized schedule at
+        the given tiling, memoized."""
+        from repro.kernels import anytime
+
+        fsched = self.factorized_schedule(block_c, block_j, block_t, term_w)
+        # mirror factorized_schedule's memo key exactly (term_w auto-pick)
+        key = next(k for k, v in self._fschedules.items() if v is fsched)
+        if key not in self._fmargins:
+            self._fmargins[key] = anytime.factorized_tile_margins(
+                fsched, self.votes)
+        return self._fmargins[key]
+
+    def quality_levels(self, engine: str = "sparse", **tiling) -> list:
+        """Quality tiers for this artifact on the given schedule engine:
+        ``[{level, n_tiles, bound, frac}, ...]`` with level 0 = exact full
+        walk (bound 0) and levels 1..N progressively shorter tile prefixes
+        whose error bound (``kernels/anytime.py`` semantics: the served
+        class trails the true winner by at most ``bound`` votes) is the
+        residual swing after the prefix."""
+        from repro.kernels import anytime
+
+        if engine == "factorized":
+            fsched = self.factorized_schedule(**tiling)
+            margins = self.factorized_tile_margins(**tiling)
+            full, min_tiles = fsched.n_tiles, fsched.n_term_tiles + 1
+        else:
+            sched = self.schedule(**tiling)
+            margins = self.tile_margins(**tiling)
+            full, min_tiles = sched.n_tiles, 1
+        levels = [dict(level=0, n_tiles=full, bound=0, frac=0.0)]
+        levels.extend(anytime.quality_prefixes(
+            margins, anytime.total_swing(self.votes), min_tiles=min_tiles))
+        return levels
+
+    def quality_prefix_schedule(self, level: int, engine: str = "sparse",
+                                **tiling):
+        """The tile-prefix schedule serving quality ``level`` (level 0
+        returns the full schedule), memoized."""
+        from repro.kernels import anytime
+
+        if level <= 0:
+            return (self.factorized_schedule(**tiling)
+                    if engine == "factorized" else self.schedule(**tiling))
+        key = (engine, tuple(sorted(tiling.items())), int(level))
+        if key not in self._prefix_schedules:
+            levels = self.quality_levels(engine, **tiling)
+            q = levels[min(level, len(levels) - 1)]
+            if engine == "factorized":
+                self._prefix_schedules[key] = anytime.factorized_prefix_schedule(
+                    self.factorized_schedule(**tiling), q["n_tiles"])
+            else:
+                self._prefix_schedules[key] = anytime.sparse_prefix_schedule(
+                    self.schedule(**tiling), q["n_tiles"])
+        return self._prefix_schedules[key]
 
     @staticmethod
     def _tuned_key(kernel: str, bucket: int, rows: int | None,
@@ -356,6 +464,8 @@ class CompiledTM:
             include_words=self.include_words,
             word_ids=self.word_ids,
             votes=self.votes,
+            sched_margin=np.asarray(self.tile_margins(), np.int64),
+            fsched_margin=np.asarray(self.factorized_tile_margins(), np.int64),
             sched_chain_ids=sched.chain_ids,
             sched_tiles=np.stack([sched.tile_cb, sched.tile_jb,
                                   sched.tile_first, sched.tile_last])
@@ -412,7 +522,8 @@ class CompiledTM:
                     os.unlink(tmp)
                 except OSError:
                     pass
-        faults.corrupt_if("artifact.bitflip", final)
+        faults.corrupt_if("artifact.bitflip", final,
+                          default_pos=_payload_offset(final))
         return final
 
     @staticmethod
@@ -478,6 +589,19 @@ class CompiledTM:
                         [[0], np.cumsum(counts)]).astype(np.int32),
                 )
             )
+            margin = np.asarray(z["sched_margin"], np.int64)
+            if faults.fire_if("anytime.margin_corrupt"):
+                # a producer writing wrong margins re-checksums them, so
+                # the envelope passes — only validate_artifact's vote-table
+                # consistency check stands between this and silently
+                # skewed early-exit predictions
+                margin = margin.copy()
+                if margin.size:
+                    margin[0] += 1
+                else:
+                    margin = np.array([1], np.int64)
+            compiled._margins[(sparse_infer.DEFAULT_BLOCK_C,
+                               sparse_infer.DEFAULT_BLOCK_J)] = margin
         if "fschedule" in meta:   # pre-factorization artifacts rebuild lazily
             fm = meta["fschedule"]
             ftiles = z["fsched_tiles"]
@@ -503,6 +627,11 @@ class CompiledTM:
                         [[0], np.cumsum(fcounts)]).astype(np.int32),
                 )
             )
+            compiled._fmargins[(term_infer.DEFAULT_BLOCK_C,
+                                term_infer.DEFAULT_BLOCK_J,
+                                term_infer.DEFAULT_BLOCK_T,
+                                fm["term_w"])] = np.asarray(
+                z["fsched_margin"], np.int64)
         compiled.tuned.update(meta.get("tuned", {}))
         compiled.features.update(meta.get("features", {}) or {})
         validate_artifact(compiled)
@@ -585,6 +714,40 @@ def validate_artifact(compiled: CompiledTM) -> None:
         check_tiles("factorized schedule", fs.counts, fs.indptr, n_ctiles,
                     fs.tile_cb[fs.tile_stage == 1] if fs.n_tiles else fs.tile_cb)
 
+    # anytime margin metadata: monotone non-increasing AND exactly the
+    # residual swing the vote table implies — corrupt margins would make
+    # early-exit certify too eagerly (wrong argmax) or budgeted mode
+    # under-report its error bound
+    def check_margins(tag, margins, sched, recompute):
+        margins = np.asarray(margins)
+        if margins.shape != (sched.n_tiles,):
+            fail(f"{tag}: margin table shape {margins.shape} != "
+                 f"({sched.n_tiles},)")
+        if margins.size == 0:
+            return
+        if np.any(margins < 0):
+            fail(f"{tag}: margin table has negative entries")
+        if np.any(np.diff(margins) > 0):
+            fail(f"{tag}: margin table is not monotone non-increasing")
+        expect = recompute(sched, compiled.votes)
+        if not np.array_equal(margins, expect):
+            fail(f"{tag}: margin table is inconsistent with the vote table "
+                 "(residual swing mismatch)")
+
+    from repro.kernels import anytime
+
+    for key, m in compiled._margins.items():
+        s = compiled._schedules.get(key)
+        if s is None:
+            fail(f"chain margin table for unknown tiling {key}")
+        check_margins("chain margins", m, s, anytime.sparse_tile_margins)
+    for key, m in compiled._fmargins.items():
+        fs = compiled._fschedules.get(key)
+        if fs is None:
+            fail(f"factorized margin table for unknown tiling {key}")
+        check_margins("factorized margins", m, fs,
+                      anytime.factorized_tile_margins)
+
 
 def compile_tm(
     config: tm.TMConfig,
@@ -644,9 +807,13 @@ def compile_tm(
 
     votes = votes[:U]
     if cluster and U > 1:
-        from repro.kernels import sparse_infer
+        from repro.kernels import anytime, sparse_infer
 
-        order = sparse_infer.cluster_order(uniq)
+        # vote-mass bands (|polarity x multiplicity| descending) so the
+        # anytime margin decays steeply, density-clustered within bands so
+        # tile counts stay near the pure-clustered layout
+        order = anytime.margin_order(uniq, votes,
+                                     cluster_fn=sparse_infer.cluster_order)
         uniq = uniq[order]
         votes = votes[order]
 
@@ -735,6 +902,8 @@ def run_compiled(
     *,
     engine=None,
     interpret: bool | None = None,
+    quality: int = 0,
+    early_exit: bool = False,
     use_kernel=_UNSET,
     fuse=_UNSET,
     sparse=_UNSET,
@@ -770,6 +939,14 @@ def run_compiled(
     Under ``engine="auto"``, a caller that pins dense-only keys
     (``block_b``/``block_w``) keeps the dense fused kernel — a dense-tuned
     configuration must not be silently reinterpreted as a schedule tiling.
+
+    Anytime inference (``kernels/anytime.py``): ``quality > 0`` serves a
+    budgeted tile prefix (error bounded by the artifact's margin
+    metadata — ``compiled.quality_levels()``), ``early_exit=True`` runs
+    the exact early-exit kernel mode (argmax-identical to the full walk).
+    Both apply only on the schedule-kernel paths; the dense and oracle
+    engines always serve exact sums (a stronger answer than requested, so
+    ladder degradation stays safe).
     """
     import warnings
 
@@ -844,20 +1021,39 @@ def run_compiled(
             "(fuse=True and sparse not pinned off via sparse=False or a "
             "dense-kernel tiling)")
     if uk and fuse and sparse and factorize:
-        fsched = compiled.factorized_schedule(
-            blocks.get("block_c"), blocks.get("block_j"),
-            blocks.get("block_t"), blocks.get("term_w"))
+        ftiling = dict(block_c=blocks.get("block_c"),
+                       block_j=blocks.get("block_j"),
+                       block_t=blocks.get("block_t"),
+                       term_w=blocks.get("term_w"))
+        if quality > 0:
+            fsched = compiled.quality_prefix_schedule(
+                quality, "factorized", **ftiling)
+        else:
+            fsched = compiled.factorized_schedule(**ftiling)
+        margin = None
+        if early_exit and quality <= 0 and fsched.n_tiles:
+            margin = jnp.asarray(
+                compiled.factorized_tile_margins(**ftiling), jnp.int32)
         return ops.tm_forward_factorized(
             xw, compiled.include_words, votes, fsched,
             use_kernel=True, interpret=it,
-            block_s=blocks.get("block_s"),
+            block_s=blocks.get("block_s"), tile_margin=margin,
         )
     if uk and fuse and sparse:
-        sched = compiled.schedule(blocks.get("block_c"), blocks.get("block_j"))
+        stiling = dict(block_c=blocks.get("block_c"),
+                       block_j=blocks.get("block_j"))
+        if quality > 0:
+            sched = compiled.quality_prefix_schedule(
+                quality, "sparse", **stiling)
+        else:
+            sched = compiled.schedule(**stiling)
+        margin = None
+        if early_exit and quality <= 0 and sched.n_tiles:
+            margin = jnp.asarray(compiled.tile_margins(**stiling), jnp.int32)
         return ops.tm_forward_schedule(
             xw, compiled.include_words, votes, sched,
             use_kernel=True, interpret=it,
-            block_s=blocks.get("block_s"),
+            block_s=blocks.get("block_s"), tile_margin=margin,
         )
     inc = jnp.asarray(compiled.include_words)
     dense_blocks = {k: v for k, v in blocks.items()

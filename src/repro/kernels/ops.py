@@ -158,6 +158,16 @@ class EngineLadder:
     ``promote_after=None`` (default) keeps the demote-only behavior.
     ``promotions``/``probe_failures`` feed the health summary alongside
     ``demotions``.
+
+    **Anytime quality** (brownout serving): :meth:`run` takes a
+    ``quality`` level.  Engines whose built callable is marked
+    ``supports_quality = True`` (an attribute the builder sets on the
+    closure) are invoked ``fn(x, quality)`` and serve the budgeted tile
+    prefix; every other engine serves exact.  ``last_quality`` reports
+    what the serving engine actually delivered (0 = exact) so the caller
+    can attribute the answer — a ladder demoted to the dense or oracle
+    engine keeps serving exact answers under brownout, which is safe
+    (stronger than requested).
     """
 
     def __init__(self, engines, promote_after: int | None = None):
@@ -172,6 +182,7 @@ class EngineLadder:
         self.probe_failures: list = []
         self._healthy = 0                    # success streak at this level
         self._cooldown = promote_after or 0  # streak required to probe up
+        self.last_quality = 0                # quality the last run served
 
     @property
     def engine(self) -> str:
@@ -216,14 +227,20 @@ class EngineLadder:
         self._builders = dict(engines)
         self._built = {}
 
-    def _run_at(self, level, make_input):
+    def _run_at(self, level, make_input, quality=0):
         name = self._names[level]
         fn = self._built.get(name)
         if fn is None:
             fn = self._built[name] = self._builders[name]()
-        return jax.block_until_ready(fn(make_input()))
+        if quality and getattr(fn, "supports_quality", False):
+            out = jax.block_until_ready(fn(make_input(), quality))
+            self.last_quality = int(quality)
+        else:
+            out = jax.block_until_ready(fn(make_input()))
+            self.last_quality = 0
+        return out
 
-    def _maybe_probe(self, make_input, bucket, count):
+    def _maybe_probe(self, make_input, bucket, count, quality=0):
         """Serve this bucket on the engine one level up when the healthy
         streak has cleared the cooldown; returns the output or None."""
         if (not self.promote_after or self._level == 0
@@ -231,7 +248,7 @@ class EngineLadder:
             return None
         target = self._names[self._level - 1]
         try:
-            out = self._run_at(self._level - 1, make_input)
+            out = self._run_at(self._level - 1, make_input, quality)
         except Exception as e:  # noqa: BLE001 — a failed probe never escapes
             self.probe_failures.append(dict(
                 engine=target, bucket=bucket,
@@ -253,15 +270,20 @@ class EngineLadder:
             self.counts[target] += 1
         return out
 
-    def run(self, make_input, bucket=None, count=True):
-        """Run the current engine on ``make_input()``, demoting on failure."""
-        probed = self._maybe_probe(make_input, bucket, count)
+    def run(self, make_input, bucket=None, count=True, quality=0):
+        """Run the current engine on ``make_input()``, demoting on failure.
+
+        ``quality > 0`` requests a budgeted (anytime) answer; engines
+        without quality support serve exact.  ``self.last_quality`` holds
+        the level actually served after the call returns.
+        """
+        probed = self._maybe_probe(make_input, bucket, count, quality)
         if probed is not None:
             return probed
         while True:
             name = self.engine
             try:
-                out = self._run_at(self._level, make_input)
+                out = self._run_at(self._level, make_input, quality)
             except Exception as e:  # noqa: BLE001 — any engine failure demotes
                 if not self.demote(f"{type(e).__name__}: {e}", bucket=bucket):
                     raise
@@ -397,6 +419,7 @@ def tm_forward_schedule(
     interpret: bool | None = None,
     autotune: bool = False,
     block_s: int | None = None,
+    tile_margin=None,           # (T,) anytime margins -> exact early-exit
     **blocks,
 ) -> jax.Array:
     """Compiled-artifact class sums via the block-sparse chain schedule.
@@ -437,8 +460,10 @@ def tm_forward_schedule(
         return _sparse_infer_kernel.sparse_tm_forward(
             lit_words, votes, schedule,
             block_s=block_s or _sparse_infer_kernel.DEFAULT_BLOCK_S,
-            interpret=interpret,
+            interpret=interpret, tile_margin=tile_margin,
         )
+    # oracle path ignores tile_margin: full sums are exact, which is a
+    # strictly stronger answer than early-exit promises
     fired = ref.clause_fire_ref(lit_words, jnp.asarray(include_words))
     return ref.class_sum_ref(fired, votes)
 
@@ -453,6 +478,7 @@ def tm_forward_factorized(
     interpret: bool | None = None,
     autotune: bool = False,
     block_s: int | None = None,
+    tile_margin=None,           # (T,) anytime margins -> exact early-exit
     **blocks,
 ) -> jax.Array:
     """Compiled-artifact class sums via the two-level FACTORIZED schedule.
@@ -502,7 +528,7 @@ def tm_forward_factorized(
         return _term_infer_kernel.factorized_tm_forward(
             lit_words, votes, schedule,
             block_s=block_s or _term_infer_kernel.DEFAULT_BLOCK_S,
-            interpret=interpret,
+            interpret=interpret, tile_margin=tile_margin,
         )
     Cp = schedule.clause_chain.shape[0]
     vts = jnp.pad(votes.astype(jnp.int32), ((0, Cp - votes.shape[0]), (0, 0)))

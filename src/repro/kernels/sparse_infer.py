@@ -373,26 +373,60 @@ def bit_transpose_literals(lit_words: jax.Array, n_lit_bits: int) -> jax.Array:
     return jnp.concatenate([lit_t, ones], axis=0)
 
 
+# Sentinel for masking padded class columns in the early-exit margin
+# check: far below any real class sum (|sums| <= total vote mass) while
+# keeping top1 - second inside int32.
+_NEG_SUM = -(2 ** 28)
+
+
+def _slab_lead_margin(sums, n_classes):
+    """Per-sample top1 - top2 over the real class columns; ties -> 0."""
+    col = jax.lax.broadcasted_iota(jnp.int32, sums.shape, 1)
+    masked = jnp.where(col < n_classes, sums, jnp.int32(_NEG_SUM))
+    top1 = jnp.max(masked, axis=1)
+    is_top = masked == top1[:, None]
+    second = jnp.max(jnp.where(is_top, jnp.int32(_NEG_SUM), masked), axis=1)
+    tied = jnp.sum(is_top.astype(jnp.int32), axis=1) > 1
+    return jnp.where(tied, jnp.int32(0), top1 - second)
+
+
 def _sparse_infer_kernel(
-    tcb_ref,    # (T,) scalar-prefetch: clause-block id per tile
-    tjb_ref,    # (T,) scalar-prefetch: chain-block id per tile
-    tfirst_ref,  # (T,) scalar-prefetch: 1 = first tile of its clause block
-    tlast_ref,  # (T,) scalar-prefetch: 1 = last tile of its clause block
-    litT_ref,   # (L + 1, block_s) uint32 bit-transposed literals
-    chain_ref,  # (block_c, block_j) int32 literal ids of this chain tile
-    votes_ref,  # (block_c, Kp) int32 multiplicity x polarity votes
-    out_ref,    # (block_s * 32, Kp) int32 class sums
-    ok_ref,     # VMEM scratch (block_c, block_s) uint32 carried clause bits
-    *,
+    *refs,
+    # positional refs: tcb, tjb, tfirst, tlast, [tmargin,] litT, chain,
+    # votes -> out, ok scratch [, done scratch]
+    #   tcb/tjb     (T,) scalar-prefetch: clause-/chain-block id per tile
+    #   tfirst/tlast (T,) scalar-prefetch: first/last tile of its clause block
+    #   tmargin     (T,) scalar-prefetch: residual vote swing after tile t
+    #   litT        (L + 1, block_s) uint32 bit-transposed literals
+    #   chain       (block_c, block_j) int32 literal ids of this chain tile
+    #   votes       (block_c, Kp) int32 multiplicity x polarity votes
+    #   out         (block_s * 32, Kp) int32 class sums
+    #   ok          VMEM scratch (block_c, block_s) uint32 carried clause bits
+    #   done        SMEM scratch (1,) int32 — slab certified, skip tiles
     block_c: int,
     block_j: int,
     block_s: int,
+    n_classes: int = 0,
+    n_samples: int = 0,
+    early_exit: bool = False,
 ):
+    if early_exit:
+        (tcb_ref, tjb_ref, tfirst_ref, tlast_ref, tmargin_ref,
+         litT_ref, chain_ref, votes_ref, out_ref, ok_ref, done_ref) = refs
+    else:
+        (tcb_ref, tjb_ref, tfirst_ref, tlast_ref,
+         litT_ref, chain_ref, votes_ref, out_ref, ok_ref) = refs
+        tmargin_ref = done_ref = None
     t = pl.program_id(1)
+    slab = pl.program_id(0)   # hoisted: program_id can't lower inside pl.when
 
     @pl.when(t == 0)
     def _init_out():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if early_exit:
+            done_ref[0] = 0
+
+    active = jnp.logical_not(done_ref[0]) if early_exit else True
 
     @pl.when(tfirst_ref[t] == 1)
     def _init_ok():   # chain start: every clause alive for every sample
@@ -415,14 +449,21 @@ def _sparse_infer_kernel(
         return ok & g[:, 0, :]
 
     # early exit: the whole slab of clauses is already dead — skip the
-    # gather and the AND chain (Clause-Out all zero propagates unchanged)
-    ok = jax.lax.cond(jnp.any(ok0 != 0), chain, lambda o: o, ok0)
+    # gather and the AND chain (Clause-Out all zero propagates unchanged);
+    # in exact early-exit mode a certified slab skips every remaining tile
+    live = jnp.any(ok0 != 0)
+    ok = jax.lax.cond(jnp.logical_and(live, active) if early_exit else live,
+                      chain, lambda o: o, ok0)
 
     @pl.when(tlast_ref[t] == 0)
     def _carry():   # Clause Out -> next chain tile's Clause In
         ok_ref[...] = ok
 
-    @pl.when(tlast_ref[t] == 1)
+    fold_pred = tlast_ref[t] == 1
+    if early_exit:
+        fold_pred = jnp.logical_and(fold_pred, active)
+
+    @pl.when(fold_pred)
     def _fold():    # adder bank: unpack sample bits, fold multiplicity votes
         shifts = jnp.arange(32, dtype=jnp.uint32)
         fired = ((ok[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
@@ -431,6 +472,15 @@ def _sparse_infer_kernel(
             fired.T, votes_ref[...], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
+        if early_exit:
+            # certify: every sample's lead STRICTLY beats the residual
+            # swing -> no remaining tile can change any argmax in the slab
+            # (padding sample slots sum to 0 forever; count them certified)
+            lead = _slab_lead_margin(out_ref[...], n_classes)
+            row = slab * (block_s * 32) + jax.lax.iota(jnp.int32, block_s * 32)
+            lead = jnp.where(row < n_samples, lead, jnp.int32(-_NEG_SUM))
+            certified = jnp.all(lead > tmargin_ref[t])
+            done_ref[0] = jnp.where(certified, 1, done_ref[0])
 
 
 @functools.partial(
@@ -444,6 +494,7 @@ def sparse_tm_forward(
     *,
     block_s: int = DEFAULT_BLOCK_S,
     interpret: bool = False,
+    tile_margin: jax.Array | None = None,   # (T,) residual swing after tile t
 ) -> jax.Array:
     """Packed literals -> (B, K) int32 class sums via the chain schedule.
 
@@ -451,6 +502,12 @@ def sparse_tm_forward(
     votes)`` for the include rows the schedule was built from (vacuous-AND
     semantics: all-zero rows fire, so their votes must be zero — guaranteed
     by ``compile_tm``).
+
+    With ``tile_margin`` (see :mod:`repro.kernels.anytime`) the kernel
+    runs in exact early-exit mode: a sample slab stops folding once every
+    sample's lead strictly exceeds the residual swing.  Argmax over the
+    result is identical to the full walk; the sums themselves may be
+    truncated.
     """
     B, W = lit_words.shape
     U, K = votes.shape
@@ -468,7 +525,7 @@ def sparse_tm_forward(
     return sparse_tm_forward_tables(
         lit_words, jnp.asarray(schedule.chain_ids), vts, tiles,
         block_c=schedule.block_c, block_j=schedule.block_j,
-        block_s=block_s, interpret=interpret,
+        block_s=block_s, interpret=interpret, tile_margin=tile_margin,
     )
 
 
@@ -539,6 +596,7 @@ def sparse_tm_forward_tables(
     block_j: int,
     block_s: int = DEFAULT_BLOCK_S,
     interpret: bool = False,
+    tile_margin: jax.Array | None = None,
 ) -> jax.Array:
     """Traced-table twin of :func:`sparse_tm_forward` for ``shard_map``
     bodies: the chain/tile tables arrive as (sharded) arrays instead of a
@@ -556,28 +614,38 @@ def sparse_tm_forward_tables(
     litT = jnp.pad(litT, ((0, 0), (0, Swp - litT.shape[1])))
     vts = jnp.pad(votes.astype(jnp.int32), ((0, 0), (0, Kp - K)))
 
+    early_exit = tile_margin is not None
+    n_prefetch = 5 if early_exit else 4
+    scratch = [pltpu.VMEM((block_c, block_s), jnp.uint32)]
+    if early_exit:
+        scratch.append(pltpu.SMEM((1,), jnp.int32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=n_prefetch,
         grid=(Swp // block_s, T),
         in_specs=[
             pl.BlockSpec((W * 32 + 1, block_s), lambda s, t, *refs: (0, s)),
             pl.BlockSpec((block_c, block_j),
-                         lambda s, t, cb, jb, tf, tl: (cb[t], jb[t])),
+                         lambda s, t, cb, jb, *refs: (cb[t], jb[t])),
             pl.BlockSpec((block_c, Kp),
-                         lambda s, t, cb, jb, tf, tl: (cb[t], 0)),
+                         lambda s, t, cb, jb, *refs: (cb[t], 0)),
         ],
         out_specs=pl.BlockSpec((block_s * 32, Kp), lambda s, t, *refs: (s, 0)),
-        scratch_shapes=[pltpu.VMEM((block_c, block_s), jnp.uint32)],
+        scratch_shapes=scratch,
     )
+    prefetch = [tiles[0], tiles[1], tiles[2], tiles[3]]
+    if early_exit:
+        prefetch.append(jnp.asarray(tile_margin, jnp.int32))
     out = pl.pallas_call(
         functools.partial(
             _sparse_infer_kernel,
             block_c=block_c, block_j=block_j, block_s=block_s,
+            n_classes=K, n_samples=B, early_exit=early_exit,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Swp * 32, Kp), jnp.int32),
         interpret=interpret,
-    )(tiles[0], tiles[1], tiles[2], tiles[3], litT, chain_ids, vts)
+    )(*prefetch, litT, chain_ids, vts)
     return out[:B, :K]
 
 

@@ -57,7 +57,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packetizer
 from repro.kernels.fused_infer import _rup
-from repro.kernels.sparse_infer import artifact_tag, bit_transpose_literals
+from repro.kernels.sparse_infer import (_NEG_SUM, _slab_lead_margin,
+                                        artifact_tag, bit_transpose_literals)
 
 # default factorized tiling: 1024-clause banks, 64-term chain tiles, one
 # big 32768-term stage-1 tile (term evaluation is the cheap stage — fewer,
@@ -331,31 +332,51 @@ def build_factorized_schedule_cached(
 
 
 def _term_infer_kernel(
-    tstage_ref,  # (T,) scalar-prefetch: 0 = term tile, 1 = clause tile
-    ttb_ref,     # (T,) scalar-prefetch: term-block id per stage-1 tile
-    tcb_ref,     # (T,) scalar-prefetch: clause-block id per stage-2 tile
-    tjb_ref,     # (T,) scalar-prefetch: chain-block id per stage-2 tile
-    tfirst_ref,  # (T,) scalar-prefetch: 1 = first clause tile of its block
-    tlast_ref,   # (T,) scalar-prefetch: 1 = last clause tile of its block
-    litT_ref,    # (L + 1, block_s) uint32 bit-transposed literals
-    tchain_ref,  # (block_t, term_w) int32 literal ids of this term tile
-    cchain_ref,  # (block_c, block_j) int32 term ids of this clause tile
-    votes_ref,   # (block_c, Kp) int32 multiplicity x polarity votes
-    out_ref,     # (block_s * 32, Kp) int32 class sums
-    term_ref,    # VMEM scratch (Tp, block_s) uint32 term bitvectors
-    ok_ref,      # VMEM scratch (block_c, block_s) uint32 carried clause bits
-    *,
+    *refs,
+    # positional refs: tstage, ttb, tcb, tjb, tfirst, tlast, [tmargin,]
+    # litT, tchain, cchain, votes -> out, term scratch, ok scratch
+    # [, done scratch]
+    #   tstage       (T,) scalar-prefetch: 0 = term tile, 1 = clause tile
+    #   ttb          (T,) scalar-prefetch: term-block id per stage-1 tile
+    #   tcb/tjb      (T,) scalar-prefetch: clause-/chain-block id (stage 2)
+    #   tfirst/tlast (T,) scalar-prefetch: first/last clause tile of block
+    #   tmargin      (T,) scalar-prefetch: residual vote swing after tile t
+    #   litT         (L + 1, block_s) uint32 bit-transposed literals
+    #   tchain       (block_t, term_w) int32 literal ids of this term tile
+    #   cchain       (block_c, block_j) int32 term ids of this clause tile
+    #   votes        (block_c, Kp) int32 multiplicity x polarity votes
+    #   out          (block_s * 32, Kp) int32 class sums
+    #   term         VMEM scratch (Tp, block_s) uint32 term bitvectors
+    #   ok           VMEM scratch (block_c, block_s) uint32 carried bits
+    #   done         SMEM scratch (1,) int32 — slab certified, skip tiles
     block_t: int,
     block_c: int,
     block_j: int,
     block_s: int,
     term_w: int,
+    n_classes: int = 0,
+    n_samples: int = 0,
+    early_exit: bool = False,
 ):
+    if early_exit:
+        (tstage_ref, ttb_ref, tcb_ref, tjb_ref, tfirst_ref, tlast_ref,
+         tmargin_ref, litT_ref, tchain_ref, cchain_ref, votes_ref,
+         out_ref, term_ref, ok_ref, done_ref) = refs
+    else:
+        (tstage_ref, ttb_ref, tcb_ref, tjb_ref, tfirst_ref, tlast_ref,
+         litT_ref, tchain_ref, cchain_ref, votes_ref,
+         out_ref, term_ref, ok_ref) = refs
+        tmargin_ref = done_ref = None
     t = pl.program_id(1)
+    slab = pl.program_id(0)   # hoisted: program_id can't lower inside pl.when
 
     @pl.when(t == 0)
     def _init_out():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if early_exit:
+            done_ref[0] = 0
+
+    active = jnp.logical_not(done_ref[0]) if early_exit else True
 
     def _tree_and(g):
         # tree-AND over the chain axis (log2 ops — the chain is associative)
@@ -366,7 +387,11 @@ def _term_infer_kernel(
                  if g.shape[1] % 2 else lo)
         return g[:, 0, :]
 
-    @pl.when(tstage_ref[t] == 0)
+    stage0 = tstage_ref[t] == 0
+    if early_exit:   # a certified slab skips every remaining tile
+        stage0 = jnp.logical_and(stage0, active)
+
+    @pl.when(stage0)
     def _eval_terms():
         # stage 1: one gather + tree-AND evaluates block_t unique terms for
         # the whole sample slab; sentinel ids land on the all-ones row, so
@@ -376,7 +401,11 @@ def _term_infer_kernel(
         g = g.reshape(block_t, term_w, block_s)
         term_ref[pl.ds(ttb_ref[t] * block_t, block_t), :] = _tree_and(g)
 
-    @pl.when(tstage_ref[t] == 1)
+    stage1 = tstage_ref[t] == 1
+    if early_exit:
+        stage1 = jnp.logical_and(stage1, active)
+
+    @pl.when(stage1)
     def _clause_tile():
         @pl.when(tfirst_ref[t] == 1)
         def _init_ok():   # chain start: every clause alive for every sample
@@ -408,6 +437,15 @@ def _term_infer_kernel(
                 fired.T, votes_ref[...], (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32,
             )
+            if early_exit:
+                # certify: every real sample's lead STRICTLY beats the
+                # residual swing (padding sample slots stay certified)
+                lead = _slab_lead_margin(out_ref[...], n_classes)
+                row = (slab * (block_s * 32)
+                       + jax.lax.iota(jnp.int32, block_s * 32))
+                lead = jnp.where(row < n_samples, lead, jnp.int32(-_NEG_SUM))
+                certified = jnp.all(lead > tmargin_ref[t])
+                done_ref[0] = jnp.where(certified, 1, done_ref[0])
 
 
 @functools.partial(
@@ -421,10 +459,16 @@ def factorized_tm_forward(
     *,
     block_s: int = DEFAULT_BLOCK_S,
     interpret: bool = False,
+    tile_margin: jax.Array | None = None,   # (T,) residual swing after tile t
 ) -> jax.Array:
     """Packed literals -> (B, K) int32 class sums via the factorized
     schedule.  Bit-identical to the sparse chain kernel (and the dense
-    oracle) for the include rows the schedule was built from."""
+    oracle) for the include rows the schedule was built from.
+
+    With ``tile_margin`` (see :mod:`repro.kernels.anytime`) the kernel
+    runs in exact early-exit mode — argmax-identical to the full walk,
+    sums possibly truncated once a slab certifies.
+    """
     B, W = lit_words.shape
     U, K = votes.shape
     assert U <= schedule.clause_chain.shape[0], (U, schedule.clause_chain.shape)
@@ -443,6 +487,7 @@ def factorized_tm_forward(
         jnp.asarray(schedule.clause_chain), vts, tiles,
         block_t=schedule.block_t, block_c=schedule.block_c,
         block_j=schedule.block_j, block_s=block_s, interpret=interpret,
+        tile_margin=tile_margin,
     )   # term_w rides on term_chain.shape[1]
 
 
@@ -458,6 +503,7 @@ def factorized_tm_forward_tables(
     block_j: int,
     block_s: int = DEFAULT_BLOCK_S,
     interpret: bool = False,
+    tile_margin: jax.Array | None = None,
 ) -> jax.Array:
     """Traced-table twin of :func:`factorized_tm_forward` for ``shard_map``
     bodies: term/clause/tile tables arrive as (sharded) arrays instead of a
@@ -476,35 +522,43 @@ def factorized_tm_forward_tables(
     litT = jnp.pad(litT, ((0, 0), (0, Swp - litT.shape[1])))
     vts = jnp.pad(votes.astype(jnp.int32), ((0, 0), (0, Kp - K)))
 
+    early_exit = tile_margin is not None
+    scratch = [
+        pltpu.VMEM((Tp, block_s), jnp.uint32),
+        pltpu.VMEM((block_c, block_s), jnp.uint32),
+    ]
+    if early_exit:
+        scratch.append(pltpu.SMEM((1,), jnp.int32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=7 if early_exit else 6,
         grid=(Swp // block_s, T),
         in_specs=[
             pl.BlockSpec((W * 32 + 1, block_s), lambda s, t, *refs: (0, s)),
             pl.BlockSpec((block_t, term_w),
-                         lambda s, t, stg, tb, cb, jb, tf, tl: (tb[t], 0)),
+                         lambda s, t, stg, tb, cb, jb, *refs: (tb[t], 0)),
             pl.BlockSpec((block_c, block_j),
-                         lambda s, t, stg, tb, cb, jb, tf, tl: (cb[t], jb[t])),
+                         lambda s, t, stg, tb, cb, jb, *refs: (cb[t], jb[t])),
             pl.BlockSpec((block_c, Kp),
-                         lambda s, t, stg, tb, cb, jb, tf, tl: (cb[t], 0)),
+                         lambda s, t, stg, tb, cb, jb, *refs: (cb[t], 0)),
         ],
         out_specs=pl.BlockSpec((block_s * 32, Kp), lambda s, t, *refs: (s, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((Tp, block_s), jnp.uint32),
-            pltpu.VMEM((block_c, block_s), jnp.uint32),
-        ],
+        scratch_shapes=scratch,
     )
+    prefetch = [tiles[0], tiles[1], tiles[2], tiles[3], tiles[4], tiles[5]]
+    if early_exit:
+        prefetch.append(jnp.asarray(tile_margin, jnp.int32))
     out = pl.pallas_call(
         functools.partial(
             _term_infer_kernel,
             block_t=block_t, block_c=block_c, block_j=block_j,
             block_s=block_s, term_w=term_w,
+            n_classes=K, n_samples=B, early_exit=early_exit,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Swp * 32, Kp), jnp.int32),
         interpret=interpret,
-    )(tiles[0], tiles[1], tiles[2], tiles[3], tiles[4], tiles[5],
-      litT, term_chain, clause_chain, vts)
+    )(*prefetch, litT, term_chain, clause_chain, vts)
     return out[:B, :K]
 
 

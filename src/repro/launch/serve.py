@@ -62,6 +62,19 @@ def serve_tm(args) -> None:
     breakers and an LRU-capped artifact cache.  Buckets still execute one
     at a time (a single executor thread) so failures and deadlines
     attribute to the bucket that caused them.
+
+    **Anytime / brownout** — ``--early-exit`` serves exact buckets
+    through the in-kernel certified early-exit path (bit-identical
+    argmax, tiles skipped once the artifact's margin metadata proves the
+    leader unassailable).  ``--brownout`` arms the gateway's
+    :class:`~repro.runtime.gateway.BrownoutController`: under overload,
+    buckets on the schedule engines run budgeted prefix inference at the
+    controller's quality level and each degraded answer carries its
+    concrete vote-margin error bound.  The dense/oracle engines (and the
+    zoo/online tenant paths, whose runner protocol is exact-only) keep
+    serving exact — serving better than requested is always allowed.
+    ``SERVE_HEALTH``/``GATEWAY_HEALTH`` report the quality-tier
+    distribution.
     """
     import json
     import os
@@ -331,6 +344,40 @@ def serve_tm(args) -> None:
             )
         return run_bucket
 
+    # anytime serving state: per-engine {level: err_bound} tables (filled
+    # when a schedule engine is built) and the served-tier histogram
+    ee0 = bool(args.early_exit or args.brownout)
+    quality_bounds = {}
+    quality_served = {}
+
+    def _quality_engine(art, engine, blocks, tiling_keys):
+        # one jit trace per (engine, quality): level 0 is the full
+        # schedule (early-exit kernel when armed), level q > 0 slices the
+        # tile table to the artifact's margin-certified prefix.  Traces
+        # build lazily — a server that never browns out pays only q=0.
+        tiling = {k: v for k, v in blocks.items() if k in tiling_keys}
+        quality_bounds[engine] = {
+            q["level"]: q["bound"]
+            for q in art.quality_levels(engine=engine, **tiling)}
+        fns = {}
+
+        def make(q):
+            return jax.jit(
+                lambda xw: compiler.run_compiled(
+                    art, xw, engine=engine, quality=q,
+                    early_exit=ee0 and q == 0, **blocks).argmax(-1),
+                donate_argnums=donate)
+
+        def run(xw, quality=0):
+            q = min(int(quality), max(quality_bounds[engine], default=0))
+            fn = fns.get(q)
+            if fn is None:
+                fn = fns[q] = make(q)
+            return fn(xw)
+
+        run.supports_quality = True
+        return run
+
     def build_engine(name):
         # lazy per-level builders: engines the ladder never reaches pay
         # neither their jit trace nor their autotune sweep.  The serving
@@ -342,17 +389,13 @@ def serve_tm(args) -> None:
             return build_mesh()
         if name == "factorized":
             blocks = tuned_factorized_blocks(art.include_words)
-            return jax.jit(
-                lambda xw: compiler.run_compiled(
-                    art, xw, engine="factorized",
-                    **blocks).argmax(-1),
-                donate_argnums=donate)
+            return _quality_engine(
+                art, "factorized", blocks,
+                ("block_c", "block_j", "block_t", "term_w"))
         if name == "sparse":
             blocks = tuned_sparse_blocks(art.include_words)
-            return jax.jit(
-                lambda xw: compiler.run_compiled(
-                    art, xw, engine="sparse", **blocks).argmax(-1),
-                donate_argnums=donate)
+            return _quality_engine(
+                art, "sparse", blocks, ("block_c", "block_j"))
         if name == "dense":
             blocks = tuned_blocks(art.n_unique)
             return jax.jit(
@@ -399,18 +442,27 @@ def serve_tm(args) -> None:
     bucket_i = itertools.count()
     online_hooks = {"latency": None}   # filled when --online wires the updater
 
-    def run_rows(rows):
+    def run_rows(rows, quality=0):
         # one gateway bucket: zero-pad to the fixed jit trace shape (a
         # partial age/drain flush never retraces), run the engine ladder,
-        # and keep the straggler/deadline accounting of the old sync loop
+        # and keep the straggler/deadline accounting of the old sync loop.
+        # ``quality`` is the brownout controller's level; only engines
+        # that opt in (supports_quality) ever degrade, and the returned
+        # info records what was ACTUALLY served plus its error bound.
         i = next(bucket_i)
         t_b = time.perf_counter()
         mon.start_step()
         faults.sleep_if("serve.slow_bucket", step=i)    # deadline drill site
         padded = np.zeros((bucket, W), xp.dtype)
         padded[:len(rows)] = rows
-        out = ladder.run(lambda: jnp.asarray(padded), bucket=i)
+        out = ladder.run(lambda: jnp.asarray(padded), bucket=i,
+                         quality=quality)
         preds = np.asarray(out)[:len(rows)]
+        q = ladder.last_quality
+        quality_served[q] = quality_served.get(q, 0) + 1
+        info = dict(quality=q,
+                    err_bound=quality_bounds.get(
+                        ladder.engine, {}).get(q) if q else None)
         flag = mon.end_step(i)
         # an engine's FIRST bucket pays its jit trace — exempting it from
         # the deadline stops one slow bucket cascading down the ladder
@@ -423,7 +475,7 @@ def serve_tm(args) -> None:
             # post-swap latency watch: a promoted artifact that blows up
             # bucket wall-time gets rolled back by the updater
             online_hooks["latency"](time.perf_counter() - t_b)
-        return preds
+        return preds, info
 
     zoo = None
     updater = None
@@ -499,19 +551,25 @@ def serve_tm(args) -> None:
                           max_entries=max(args.zoo - 1, 1))
         runner = zoo.runner(lambda obj, rows: run_rows(rows))
     else:
-        runner = lambda tenant, rows: run_rows(rows)
+        # the single-tenant runner is quality-aware (the zoo runner
+        # protocol is exact-only: leases/breakers wrap a plain
+        # run(tenant, rows), so multi-tenant brownout would need a
+        # protocol bump — those paths serve exact under pressure)
+        runner = lambda tenant, rows, quality=0: run_rows(rows, quality)
 
     def tenant_of(j):
         return f"t{j % args.zoo}" if args.zoo else "t0"
 
     async def stream():
-        from repro.runtime.gateway import Gateway
+        from repro.runtime.gateway import BrownoutController, Gateway
 
         gw = await Gateway(
             runner, bucket=bucket, max_queue=args.max_queue or None,
             max_wait=args.max_wait_ms / 1e3,
             drain_timeout=args.drain_timeout,
-            mirror=updater.mirror if updater is not None else None).start()
+            mirror=updater.mirror if updater is not None else None,
+            brownout=BrownoutController() if args.brownout else None,
+        ).start()
         loop = asyncio.get_running_loop()
         stop = asyncio.Event()
         try:
@@ -599,6 +657,9 @@ def serve_tm(args) -> None:
         engine_buckets=ladder.counts, demotions=ladder.demotions,
         promotions=ladder.promotions, probe_failures=ladder.probe_failures,
         stragglers=mon.events,
+        early_exit=ee0, brownout=bool(args.brownout),
+        quality_tiers={str(k): v
+                       for k, v in sorted(quality_served.items())},
     )
     print("SERVE_HEALTH " + json.dumps(health))
     if zoo is not None:
@@ -706,6 +767,19 @@ def main() -> None:
                     help="TM gateway: seconds the SIGTERM/end-of-stream "
                          "drain may spend flushing before shedding the "
                          "remainder drain_timeout")
+    ap.add_argument("--early-exit", action="store_true",
+                    help="TM: serve exact buckets through the in-kernel "
+                         "certified early-exit path (bit-identical argmax; "
+                         "tiles skipped once the artifact's anytime margin "
+                         "metadata proves the leader unassailable)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="TM gateway: degrade answer QUALITY instead of "
+                         "shedding under overload — a hysteresis "
+                         "controller maps queue depth / bucket age / "
+                         "deadline pressure to an anytime quality level; "
+                         "degraded answers carry a concrete vote-margin "
+                         "error bound (implies --early-exit for exact "
+                         "buckets)")
     ap.add_argument("--zoo", type=int, default=None,
                     help="TM gateway: serve this many round-robin tenants "
                          "through the artifact zoo (per-tenant circuit "

@@ -55,6 +55,9 @@ def train_tm(args) -> None:
         start_step = extra["step"]
         print(f"resumed from step {start_step}")
 
+    # chains to any handler the host process already registered and is
+    # uninstalled in the finally below, so embedding this loop in a
+    # serving process never clobbers the gateway's SIGTERM drain
     pre = PreemptionHandler().install()
     mon = StragglerMonitor()
     ta = state.ta_state
@@ -114,42 +117,50 @@ def train_tm(args) -> None:
         )
         print(f"mesh {dict(mesh.shape)}: clause axis sharded over "
               f"model={mesh.shape['model']}")
-    for step in range(start_step, args.steps):
-        mon.start_step()
-        xb, yb = next(it)
-        if sharded_step is not None:
-            ta = sharded_step(ta, jnp.asarray(xb), jnp.asarray(yb),
-                              jnp.uint32(step))
-        else:
-            ta, _ = ops.tm_train_step_kernel(
-                config, ta, jnp.asarray(xb), jnp.asarray(yb),
-                jnp.uint32(step), **step_kw,
-            )
-        faults.sleep_if("train.slow_step", step=step)   # straggler drill
-        flag = mon.end_step(step)
-        if flag:
-            print(f"straggler flagged: {flag}")
-        if mgr and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step + 1, {"ta": ta},
-                     extra={"step": step + 1, "loader": loader.state_dict()},
-                     blocking=False)
-        faults.sigterm_if("train.sigterm", step=step)    # preemption drill
-        if pre.preempted:
-            # checkpoint (when durable storage is configured) and exit with
-            # the dedicated code the launcher restarts on — even without a
-            # --ckpt-dir the exit code must still say "resume me", not crash
-            print("preempted: checkpointing and exiting for restart "
-                  f"(exit code {RESUME_EXIT_CODE})")
-            pre.checkpoint_and_exit(
-                (lambda: mgr.save(
-                    step + 1, {"ta": ta},
-                    extra={"step": step + 1, "loader": loader.state_dict()}))
-                if mgr else (lambda: None))
-        if (step + 1) % args.log_every == 0:
-            st = tm.TMState(ta_state=ta, steps=jnp.int32(step))
-            acc = float(tm.accuracy(config, st, jnp.asarray(Xte), jnp.asarray(yte)))
-            inc = float((np.asarray(ta) >= 0).mean())
-            print(f"step {step + 1}: test_acc={acc:.4f} include_frac={inc:.4f}")
+    try:
+        for step in range(start_step, args.steps):
+            mon.start_step()
+            xb, yb = next(it)
+            if sharded_step is not None:
+                ta = sharded_step(ta, jnp.asarray(xb), jnp.asarray(yb),
+                                  jnp.uint32(step))
+            else:
+                ta, _ = ops.tm_train_step_kernel(
+                    config, ta, jnp.asarray(xb), jnp.asarray(yb),
+                    jnp.uint32(step), **step_kw,
+                )
+            faults.sleep_if("train.slow_step", step=step)  # straggler drill
+            flag = mon.end_step(step)
+            if flag:
+                print(f"straggler flagged: {flag}")
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, {"ta": ta},
+                         extra={"step": step + 1,
+                                "loader": loader.state_dict()},
+                         blocking=False)
+            faults.sigterm_if("train.sigterm", step=step)  # preemption drill
+            if pre.preempted:
+                # checkpoint (when durable storage is configured) and exit
+                # with the dedicated code the launcher restarts on — even
+                # without a --ckpt-dir the exit code must still say
+                # "resume me", not crash
+                print("preempted: checkpointing and exiting for restart "
+                      f"(exit code {RESUME_EXIT_CODE})")
+                pre.checkpoint_and_exit(
+                    (lambda: mgr.save(
+                        step + 1, {"ta": ta},
+                        extra={"step": step + 1,
+                               "loader": loader.state_dict()}))
+                    if mgr else (lambda: None))
+            if (step + 1) % args.log_every == 0:
+                st = tm.TMState(ta_state=ta, steps=jnp.int32(step))
+                acc = float(tm.accuracy(
+                    config, st, jnp.asarray(Xte), jnp.asarray(yte)))
+                inc = float((np.asarray(ta) >= 0).mean())
+                print(f"step {step + 1}: test_acc={acc:.4f} "
+                      f"include_frac={inc:.4f}")
+    finally:
+        pre.uninstall()
     if mgr:
         mgr.save(args.steps, {"ta": ta},
                  extra={"step": args.steps, "loader": loader.state_dict()})

@@ -1,5 +1,6 @@
 from repro.runtime import faults  # noqa: F401
-from repro.runtime.gateway import Gateway, Response  # noqa: F401
+from repro.runtime.gateway import (BrownoutConfig, BrownoutController,  # noqa: F401
+                                   Gateway, Response)
 from repro.runtime.preemption import RESUME_EXIT_CODE, PreemptionHandler  # noqa: F401
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
 from repro.runtime.zoo import ArtifactZoo, TenantQuarantined  # noqa: F401

@@ -95,6 +95,18 @@ SITES = {
                                "corrupts a labeled feedback record before "
                                "validation (label out of range); the "
                                "updater must reject it, never train on it",
+    "anytime.margin_corrupt": "compiler.CompiledTM.load — tampers the "
+                              "anytime margin metadata after the checksum "
+                              "passes (adversarial producer); "
+                              "validate_artifact must reject the artifact, "
+                              "never serve early-exit/budgeted answers "
+                              "from skewed margins",
+    "gateway.brownout_stuck": "runtime/gateway.py brownout controller — "
+                              "pins the primary level-lowering path so the "
+                              "controller stays at a degraded quality "
+                              "level after pressure clears; the low-"
+                              "pressure watchdog must force recovery to "
+                              "exact serving",
 }
 
 
@@ -179,15 +191,27 @@ class FaultInjector:
         os.kill(os.getpid(), signal.SIGTERM)
         return True
 
-    def corrupt_if(self, site: str, path: str, step=None) -> bool:
-        """Flip one byte of ``path`` (XOR 0x40) at an armed site."""
+    def corrupt_if(self, site: str, path: str, step=None,
+                   default_pos: Optional[int] = None) -> bool:
+        """Flip one byte of ``path`` (XOR 0x40) at an armed site.
+
+        The spec ``:param`` wins as the byte offset; otherwise the call
+        site's ``default_pos`` (a position it knows holds real payload —
+        e.g. inside a zip member's compressed data rather than redundant
+        container metadata); otherwise the middle of the file.
+        """
         sp = self.poll(site, step)
         if sp is None:
             return False
         with open(path, "r+b") as f:
             f.seek(0, os.SEEK_END)
             size = f.tell()
-            pos = int(sp.param) if sp.param is not None else size // 2
+            if sp.param is not None:
+                pos = int(sp.param)
+            elif default_pos is not None:
+                pos = int(default_pos)
+            else:
+                pos = size // 2
             pos = min(max(pos, 0), size - 1)
             f.seek(pos)
             b = f.read(1)
@@ -254,5 +278,5 @@ def sigterm_if(site: str, step=None) -> bool:
     return get_injector().sigterm_if(site, step)
 
 
-def corrupt_if(site: str, path: str, step=None) -> bool:
-    return get_injector().corrupt_if(site, path, step)
+def corrupt_if(site: str, path: str, step=None, default_pos=None) -> bool:
+    return get_injector().corrupt_if(site, path, step, default_pos=default_pos)

@@ -41,10 +41,28 @@ to different tenants/models.  This gateway is the traffic-facing layer:
   queued when the timer expires with ``drain_timeout``.  The final
   ``GATEWAY_HEALTH`` dict accounts for 100% of offered requests.
 
+* **Brownout serving** — under overload the gateway can degrade ANSWER
+  QUALITY instead of shedding: a :class:`BrownoutController` maps load
+  pressure (queue depth, bucket age, deadline pressure) to an anytime
+  quality level (0 = exact, 1..max = budgeted prefix inference with a
+  concrete vote-margin error bound — see ``kernels/anytime.py``).  A
+  quality-aware runner (one taking a ``quality`` keyword) receives the
+  level per bucket and may return ``(preds, info)`` where ``info``
+  carries the quality actually served and its ``err_bound``.  Degraded
+  answers are still ANSWERS: the accounting invariant refines to
+  ``offered == answered_exact + answered_degraded + shed_total`` and
+  :meth:`Gateway.health` reports the quality-tier distribution.
+  Escalation is immediate (one evaluation above an enter threshold);
+  recovery steps down one level per evaluation with hysteresis
+  (``exit[k] < enter[k]``), and a fault-independent low-pressure
+  watchdog forces exact serving if the primary step-down path wedges.
+
 Fault sites (``runtime/faults.py``): ``gateway.queue_overflow`` forces an
 admission-time shed; ``gateway.drain_timeout`` forces the drain timer to
-expire immediately.  Both are drilled in ``tests/test_gateway.py`` and
-under live Poisson load in ``benchmarks/serve_gateway.py --chaos``.
+expire immediately; ``gateway.brownout_stuck`` pins the controller's
+primary step-down path so the watchdog recovery is drilled.  All are
+drilled in ``tests/test_gateway.py`` and under live Poisson load in
+``benchmarks/serve_gateway.py --chaos``.
 
 Execution is serialized through a single worker thread: the engines are
 jit'd callables whose per-bucket wall-time is the unit of straggler/
@@ -57,6 +75,7 @@ from __future__ import annotations
 import asyncio
 import collections
 import dataclasses
+import inspect
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional
@@ -82,12 +101,102 @@ SHED_REASONS = (QUEUE_FULL, SHUTTING_DOWN, DEADLINE_EXPIRED, DRAIN_TIMEOUT,
 
 @dataclasses.dataclass
 class Response:
-    """Terminal outcome of one request: answered or typed-shed."""
+    """Terminal outcome of one request: answered or typed-shed.
+
+    ``quality`` is the anytime level the answer was served at (0 = exact
+    full-schedule inference); a degraded answer (``quality > 0``) carries
+    the concrete vote-margin ``err_bound`` it was computed under.
+    """
     tenant: str
     ok: bool
     pred: Optional[int] = None
     reason: Optional[str] = None
     latency_s: float = 0.0
+    quality: int = 0
+    err_bound: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutConfig:
+    """Hysteresis thresholds for the brownout controller.
+
+    ``enter[k-1]`` is the pressure at which level ``k`` is entered;
+    ``exit[k-1]`` the pressure below which level ``k`` steps down one
+    level.  ``exit[k] < enter[k]`` gives the hysteresis band that stops
+    the controller from flapping around a threshold.  ``watchdog_evals``
+    consecutive evaluations below ``exit[0]`` force level 0 through a
+    path that does NOT consult the primary step-down logic — the
+    recovery drilled by the ``gateway.brownout_stuck`` fault site.
+    """
+    max_level: int = 3
+    enter: tuple = (0.5, 0.7, 0.85)
+    exit: tuple = (0.3, 0.5, 0.65)
+    watchdog_evals: int = 8
+
+
+class BrownoutController:
+    """Maps load pressure to an anytime quality level with hysteresis.
+
+    Pressure is the worst of three normalized signals — queue occupancy,
+    oldest-bucket age (relative to 4x the age-flush window), and the
+    flushed bucket's deadline pressure (fraction of its tightest
+    deadline already elapsed) — clipped to [0, 1].  Escalation is
+    immediate: one evaluation at/above ``enter[k-1]`` jumps straight to
+    level ``k``.  Recovery is deliberate: one level per evaluation once
+    pressure drops below the current level's exit threshold.
+    """
+
+    def __init__(self, config: Optional[BrownoutConfig] = None):
+        self.cfg = config or BrownoutConfig()
+        self.level = 0
+        self.escalations = 0
+        self.stepdowns = 0
+        self.watchdog_resets = 0
+        self.evals = 0
+        self._calm = 0    # consecutive evaluations below exit[0]
+
+    @staticmethod
+    def pressure(*, pending: int, max_queue: Optional[int],
+                 oldest_age: float, max_wait: float,
+                 deadline_frac: float = 0.0) -> float:
+        terms = [float(deadline_frac)]
+        if max_queue:
+            terms.append(pending / max_queue)
+        if max_wait > 0:
+            terms.append(oldest_age / (4.0 * max_wait))
+        return min(max(max(terms), 0.0), 1.0)
+
+    def update(self, pressure: float) -> int:
+        """Fold one pressure sample; returns the quality level to serve."""
+        cfg = self.cfg
+        self.evals += 1
+        self._calm = self._calm + 1 if pressure < cfg.exit[0] else 0
+        target = 0
+        for k in range(cfg.max_level, 0, -1):
+            if pressure >= cfg.enter[k - 1]:
+                target = k
+                break
+        if target > self.level:
+            self.level = target
+            self.escalations += 1
+            return self.level
+        if self.level > 0 and self._calm >= cfg.watchdog_evals:
+            # fault-independent recovery: sustained calm forces exact
+            # serving even when the primary step-down path is wedged
+            self.level = 0
+            self.watchdog_resets += 1
+            self._calm = 0
+            return self.level
+        if (self.level > 0 and pressure < cfg.exit[self.level - 1]
+                and not faults.fire_if("gateway.brownout_stuck")):
+            self.level -= 1
+            self.stepdowns += 1
+        return self.level
+
+    def health(self) -> dict:
+        return dict(level=self.level, evals=self.evals,
+                    escalations=self.escalations, stepdowns=self.stepdowns,
+                    watchdog_resets=self.watchdog_resets)
 
 
 @dataclasses.dataclass
@@ -108,13 +217,26 @@ class Gateway:
     its jit trace shape, engine-ladder demotion, and straggler accounting;
     it raises to reject the whole bucket (typed via a ``shed_reason``
     attribute on the exception, else ``engine_failed``).
+
+    A quality-aware runner additionally accepts a ``quality`` keyword
+    (the brownout controller's level for this bucket) and may return
+    ``(preds, info)`` where ``info`` is a dict with the quality actually
+    served (``quality``) and its vote-margin ``err_bound``.  A plain
+    runner under brownout keeps serving exact — degradation is opt-in.
     """
 
     def __init__(self, runner: Callable, *, bucket: int = 128,
                  max_queue: Optional[int] = None, max_wait: float = 0.02,
                  drain_timeout: float = 5.0, clock=time.monotonic,
-                 mirror: Optional[Callable] = None):
+                 mirror: Optional[Callable] = None,
+                 brownout: Optional[BrownoutController] = None):
         self._runner = runner
+        self._brownout = brownout
+        try:
+            self._runner_quality = "quality" in inspect.signature(
+                runner).parameters
+        except (TypeError, ValueError):   # builtins / C callables
+            self._runner_quality = False
         # shadow-canary tap: ``mirror(tenant, rows, preds)`` observes a
         # successfully-answered bucket (worker thread, AFTER the serving
         # predictions are computed).  It must never affect the answer: any
@@ -136,10 +258,14 @@ class Gateway:
         self._idle: Optional[asyncio.Event] = None
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="gw-exec")
-        # -- accounting: offered == answered + sum(shed.values()) always --
+        # -- accounting: offered == answered_exact + answered_degraded
+        #    + sum(shed.values()) always (answered = exact + degraded) --
         self.offered = 0
         self.admitted = 0
         self.answered = 0
+        self.answered_exact = 0
+        self.answered_degraded = 0
+        self.quality_tiers: Dict[int, int] = {}
         self.shed: Dict[str, int] = {}
         self.buckets = 0
         self.flushes = {"full": 0, "age": 0, "drain": 0}
@@ -161,6 +287,12 @@ class Gateway:
         if resp.ok:
             self.answered += 1
             row["answered"] += 1
+            q = int(resp.quality)
+            self.quality_tiers[q] = self.quality_tiers.get(q, 0) + 1
+            if q == 0:
+                self.answered_exact += 1
+            else:
+                self.answered_degraded += 1
             self._latencies.append(resp.latency_s)
         else:
             self.shed[resp.reason] = self.shed.get(resp.reason, 0) + 1
@@ -256,9 +388,25 @@ class Gateway:
         read once per bucket on the worker thread)."""
         self._mirror = mirror
 
-    def _run_bucket(self, tenant: str, rows):
-        """Worker-thread bucket execution + best-effort shadow mirror."""
-        preds = self._runner(tenant, rows)
+    def _run_bucket(self, tenant: str, rows, quality: int = 0):
+        """Worker-thread bucket execution + best-effort shadow mirror.
+
+        Returns ``(preds, info)`` where ``info`` records the quality the
+        bucket was actually served at (a runner may serve BETTER than
+        requested — e.g. a dense fallback is always exact) and, for
+        degraded service, the concrete error bound.
+        """
+        if self._runner_quality:
+            out = self._runner(tenant, rows, quality=quality)
+        else:
+            out = self._runner(tenant, rows)
+        if (isinstance(out, tuple) and len(out) == 2
+                and isinstance(out[1], dict)):
+            preds, info = out
+        else:
+            preds, info = out, {}
+        info = dict(quality=int(info.get("quality", 0)),
+                    err_bound=info.get("err_bound"))
         mirror = self._mirror
         if mirror is not None:
             try:
@@ -266,7 +414,7 @@ class Gateway:
                 self.mirrored += 1
             except Exception:  # noqa: BLE001 — the tap must never shed
                 self.mirror_failures += 1
-        return preds
+        return preds, info
 
     async def _dispatch_loop(self) -> None:
         loop = asyncio.get_running_loop()
@@ -290,10 +438,11 @@ class Gateway:
             self._inflight += len(reqs)
             self.flushes[cause] += 1
             self.buckets += 1
+            quality = self._brownout_level(reqs, now)
             try:
-                preds = await loop.run_in_executor(
+                preds, info = await loop.run_in_executor(
                     self._pool, self._run_bucket, tenant,
-                    [r.x for r in reqs])
+                    [r.x for r in reqs], quality)
             except Exception as e:  # noqa: BLE001 — typed bucket rejection
                 reason = getattr(e, "shed_reason", ENGINE_FAILED)
                 end = self._clock()
@@ -304,12 +453,33 @@ class Gateway:
             else:
                 preds = np.asarray(preds)
                 end = self._clock()
+                served_q = info["quality"]
+                bound = info["err_bound"] if served_q else None
                 for i, r in enumerate(reqs):
                     self._resolve(r, Response(
                         tenant=tenant, ok=True, pred=int(preds[i]),
-                        latency_s=end - r.t_submit))
+                        latency_s=end - r.t_submit,
+                        quality=served_q, err_bound=bound))
             finally:
                 self._inflight -= len(reqs)
+
+    def _brownout_level(self, reqs, now: float) -> int:
+        """Quality level for the bucket about to run (0 when disabled)."""
+        if self._brownout is None:
+            return 0
+        frac = 0.0
+        for r in reqs:
+            if r.deadline is not None and r.deadline > r.t_submit:
+                frac = max(frac, (now - r.t_submit)
+                           / (r.deadline - r.t_submit))
+        oldest = 0.0
+        for q in self._queues.values():
+            if q:
+                oldest = max(oldest, now - q[0].t_submit)
+        p = BrownoutController.pressure(
+            pending=self._pending, max_queue=self.max_queue,
+            oldest_age=oldest, max_wait=self.max_wait, deadline_frac=frac)
+        return self._brownout.update(p)
 
     # -- drain / shutdown ----------------------------------------------------
 
@@ -362,9 +532,16 @@ class Gateway:
         return dict(
             offered=self.offered, admitted=self.admitted,
             answered=self.answered,
+            answered_exact=self.answered_exact,
+            answered_degraded=self.answered_degraded,
+            quality_tiers={str(k): v for k, v in
+                           sorted(self.quality_tiers.items())},
+            brownout=(None if self._brownout is None
+                      else self._brownout.health()),
             shed={k: v for k, v in self.shed.items() if v},
             shed_total=shed_total,
-            unaccounted=self.offered - self.answered - shed_total,
+            unaccounted=(self.offered - self.answered_exact
+                         - self.answered_degraded - shed_total),
             buckets=self.buckets, bucket_size=self.bucket,
             flushes=dict(self.flushes),
             queue_depth=self._pending, draining=self._draining,

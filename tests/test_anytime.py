@@ -1,0 +1,367 @@
+"""Anytime inference: margin metadata soundness, exact early-exit,
+budgeted-mode error bounds, and the brownout controller.
+
+The contract under test (``kernels/anytime.py`` / ISSUE "brownout
+serving"):
+
+* ``margin[t]`` — residual vote swing after tile ``t`` — is monotone
+  non-increasing, ends at 0, and is consistent with the vote table.
+* exact early-exit is BIT-IDENTICAL to the full walk's argmax (property-
+  tested against the XLA oracle over random automata).
+* budgeted mode's realized error never exceeds its reported bound: every
+  pairwise class-sum margin moves by at most ``bound`` votes, so the
+  served class trails the true winner by at most ``bound``.
+* the ``BrownoutController`` escalates immediately, recovers with
+  hysteresis, and its fault-independent watchdog un-wedges a stuck
+  step-down path (``gateway.brownout_stuck`` drill).
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, packetizer, tm
+from repro.kernels import anytime, ops, sparse_infer
+from repro.runtime import faults
+from repro.runtime.gateway import BrownoutConfig, BrownoutController
+
+pytestmark = pytest.mark.anytime
+
+# small tilings force multi-tile schedules on test-sized banks so prefix
+# slicing and early-exit certification actually have tiles to skip
+SBLOCKS = dict(block_c=16, block_j=8)
+FBLOCKS = dict(block_c=16, block_j=8, block_t=64, term_w=8)
+
+
+def _random_tm(n_features, n_classes, cpc, include_density, seed):
+    rng = np.random.default_rng(seed)
+    C = n_classes * cpc
+    ta = np.where(
+        rng.random((C, 2 * n_features)) < include_density,
+        rng.integers(0, 127, (C, 2 * n_features)),
+        rng.integers(-128, 0, (C, 2 * n_features)),
+    ).astype(np.int8)
+    cfg = tm.TMConfig(n_features=n_features, n_classes=n_classes,
+                      clauses_per_class=cpc)
+    return cfg, ta
+
+
+def _compiled(seed=0, n_features=48, n_classes=4, cpc=16, density=0.12):
+    cfg, ta = _random_tm(n_features, n_classes, cpc, density, seed)
+    return compiler.compile_tm(cfg, ta), cfg
+
+
+def _packed(comp, cfg, B=24, seed=1):
+    x = np.random.default_rng(seed).integers(
+        0, 2, (B, cfg.n_features), dtype=np.uint8)
+    return packetizer.pack_literals(jnp.asarray(x))
+
+
+# --------------------------------------------------------------------------
+# margin tables
+# --------------------------------------------------------------------------
+
+def test_row_swing_and_total():
+    votes = np.array([[3, -2], [0, 0], [5, 5], [-1, 4]])
+    np.testing.assert_array_equal(anytime.row_swing(votes), [5, 0, 0, 5])
+    assert anytime.total_swing(votes) == 10
+
+
+@pytest.mark.parametrize("engine", ["sparse", "factorized"])
+def test_margins_monotone_and_terminal(engine):
+    comp, _ = _compiled()
+    if engine == "sparse":
+        margins = comp.tile_margins(**SBLOCKS)
+        sched = comp.schedule(**SBLOCKS)
+    else:
+        margins = comp.factorized_tile_margins(**FBLOCKS)
+        sched = comp.factorized_schedule(**FBLOCKS)
+    assert margins.shape == (sched.n_tiles,)
+    assert sched.n_tiles > 3          # multi-tile, or the test is vacuous
+    assert np.all(margins >= 0)
+    assert np.all(np.diff(margins) <= 0), "margins must be non-increasing"
+    # after the LAST tile every clause block has folded: nothing remains
+    assert margins[-1] == 0
+    assert margins[0] <= anytime.total_swing(comp.votes)
+
+
+def test_margin_order_is_mass_banded_permutation():
+    comp, _ = _compiled()
+    inc, votes = comp.include_words, comp.votes
+    order = anytime.margin_order(inc, votes,
+                                 cluster_fn=sparse_infer.cluster_order)
+    assert sorted(order.tolist()) == list(range(len(votes)))
+    mass = np.abs(votes.astype(np.int64)).sum(axis=1)[order]
+    # banded descending: every row's band is >= the previous row's band
+    top = int(mass.max())
+    band = np.where(mass > 0,
+                    np.floor(np.log2(top / np.maximum(mass, 1))), 99)
+    assert np.all(np.diff(band) >= 0)
+    # compile_tm itself applies margin_order: the compiled artifact's
+    # first clause row carries top-band vote mass
+    first_mass = int(np.abs(comp.votes[0].astype(np.int64)).sum())
+    assert first_mass * 2 > int(np.abs(
+        comp.votes.astype(np.int64)).sum(axis=1).max())
+
+
+def test_quality_levels_structure():
+    comp, _ = _compiled()
+    for engine, tiling in (("sparse", SBLOCKS), ("factorized", FBLOCKS)):
+        levels = comp.quality_levels(engine=engine, **tiling)
+        assert levels[0] == dict(level=0, n_tiles=levels[0]["n_tiles"],
+                                 bound=0, frac=0.0)
+        total = anytime.total_swing(comp.votes)
+        margins = (comp.tile_margins(**tiling) if engine == "sparse"
+                   else comp.factorized_tile_margins(**tiling))
+        for q in levels[1:]:
+            assert 1 <= q["n_tiles"] <= levels[0]["n_tiles"]
+            assert q["bound"] == int(margins[q["n_tiles"] - 1])
+        # deeper degradation never runs MORE tiles
+        n = [q["n_tiles"] for q in levels]
+        assert all(a >= b for a, b in zip(n, n[1:]))
+
+
+# --------------------------------------------------------------------------
+# budgeted mode: realized error <= reported bound
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,tiling",
+                         [("sparse", SBLOCKS), ("factorized", FBLOCKS)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_budgeted_error_within_bound(engine, tiling, seed):
+    comp, cfg = _compiled(seed=seed)
+    xp = _packed(comp, cfg, seed=seed + 10)
+    full = np.asarray(compiler.run_compiled(
+        comp, xp, engine=engine, interpret=True, **tiling), np.int64)
+    for q in comp.quality_levels(engine=engine, **tiling)[1:]:
+        got = np.asarray(compiler.run_compiled(
+            comp, xp, engine=engine, interpret=True,
+            quality=q["level"], **tiling), np.int64)
+        # every pairwise class-sum margin within +-bound of the full walk
+        d_full = full[:, :, None] - full[:, None, :]
+        d_got = got[:, :, None] - got[:, None, :]
+        realized = np.abs(d_full - d_got).max()
+        assert realized <= q["bound"], (q, realized)
+        # served class trails the true winner by at most `bound` votes
+        served = got.argmax(axis=1)
+        trail = full.max(axis=1) - full[np.arange(len(full)), served]
+        assert trail.max() <= q["bound"]
+
+
+# --------------------------------------------------------------------------
+# exact early-exit: bit-identical argmax vs the XLA oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,tiling",
+                         [("sparse", SBLOCKS), ("factorized", FBLOCKS)])
+@pytest.mark.parametrize("seed,density",
+                         [(0, 0.05), (1, 0.12), (2, 0.25), (3, 0.4)])
+def test_early_exit_argmax_bit_identical(engine, tiling, seed, density):
+    comp, cfg = _compiled(seed=seed, density=density)
+    xp = _packed(comp, cfg, B=40, seed=seed + 20)
+    oracle = np.asarray(compiler.run_compiled(
+        comp, xp, engine="oracle")).argmax(axis=1)
+    got = np.asarray(compiler.run_compiled(
+        comp, xp, engine=engine, interpret=True,
+        early_exit=True, **tiling)).argmax(axis=1)
+    np.testing.assert_array_equal(oracle, got)
+
+
+def _confident_setup():
+    """An artifact whose FIRST clause block decides every sample: a
+    dominant always-firing clause up front, weak random tail — the
+    canonical early-exit shape."""
+    cfg, ta = _random_tm(48, 4, 16, 0.1, seed=7)
+    comp = compiler.compile_tm(cfg, ta)
+    F = cfg.n_features
+    inc, wid = comp.include_words, comp.word_ids
+
+    def lits(r):
+        return [int(wid[w]) * 32 + b
+                for w in range(inc.shape[1]) for b in range(32)
+                if int(inc[r, w]) >> b & 1]
+
+    # a clause is satisfiable by a single x iff it never includes both
+    # polarities of one feature; find one and pin x to satisfy it
+    row = want = None
+    for r in range(inc.shape[0]):
+        feats, ok = {}, bool(lits(r))
+        for j in lits(r):
+            f, pos = (j, 1) if j < F else (j - F, 0)
+            if feats.setdefault(f, pos) != pos:
+                ok = False
+                break
+        if ok:
+            row, want = r, feats
+            break
+    assert row is not None
+    for arr in (comp.include_words, comp.votes):
+        arr[[0, row]] = arr[[row, 0]]
+    comp.votes[0] = 0
+    comp.votes[0, 0], comp.votes[0, 1] = 4000, -4000
+    # a TAIL-block clause with the same (always-satisfied) include pattern
+    # and a small vote: its fold is observable in the full walk's sums, so
+    # a truncated early-exit run provably skipped it
+    comp.include_words[20] = comp.include_words[0]
+    comp.votes[20] = 0
+    comp.votes[20, 2], comp.votes[20, 3] = 5, -5
+    for memo in (comp._margins, comp._fmargins, comp._schedules,
+                 comp._fschedules, comp._prefix_schedules):
+        memo.clear()
+    x = np.random.default_rng(3).integers(0, 2, (16, F), dtype=np.uint8)
+    for f, pos in want.items():
+        x[:, f] = pos                # the dominant clause fires for all
+    return comp, packetizer.pack_literals(jnp.asarray(x))
+
+
+def test_early_exit_truncates_on_confident_artifact():
+    # the done flag must fire after the dominant block folds and SKIP the
+    # tail folds: raw sums differ from the full walk, the argmax does not
+    comp, xp = _confident_setup()
+    full = np.asarray(compiler.run_compiled(
+        comp, xp, engine="sparse", interpret=True, **SBLOCKS))
+    ee = np.asarray(compiler.run_compiled(
+        comp, xp, engine="sparse", interpret=True, early_exit=True,
+        **SBLOCKS))
+    np.testing.assert_array_equal(full.argmax(1), ee.argmax(1))
+    assert not np.array_equal(full, ee), \
+        "early exit never fired: sums identical to the full walk"
+
+
+def test_slab_lead_margin_ties_and_padding():
+    sums = jnp.asarray(np.array([[10, 10, 0, 99],       # tie -> lead 0
+                                 [7, 3, 1, 99]]), jnp.int32)
+    lead = np.asarray(sparse_infer._slab_lead_margin(sums, n_classes=3))
+    np.testing.assert_array_equal(lead, [0, 4])   # pad col 99 ignored
+
+
+# --------------------------------------------------------------------------
+# artifact persistence + validation + fault drill
+# --------------------------------------------------------------------------
+
+def test_artifact_roundtrip_preserves_margins_and_validates():
+    comp, _ = _compiled()
+    want_s = comp.tile_margins()                 # default tilings persist
+    want_f = comp.factorized_tile_margins()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "a.npz")
+        comp.save(path)
+        loaded = compiler.CompiledTM.load(path)
+    np.testing.assert_array_equal(loaded.tile_margins(), want_s)
+    np.testing.assert_array_equal(loaded.factorized_tile_margins(), want_f)
+    compiler.validate_artifact(loaded)           # margins checked here
+
+
+def test_validate_rejects_inconsistent_margins():
+    comp, _ = _compiled()
+    margins = comp.tile_margins().copy()
+    margins[0] += 2                              # no longer matches votes
+    key = next(iter(comp._margins))
+    comp._margins[key] = margins
+    with pytest.raises(compiler.ArtifactError, match="margin"):
+        compiler.validate_artifact(comp)
+
+
+def test_validate_rejects_nonmonotone_margins():
+    comp, _ = _compiled()
+    margins = comp.tile_margins(**SBLOCKS).copy()
+    assert len(margins) >= 2
+    margins[-1] = margins[0] + 5                 # increases at the tail
+    key = next(iter(comp._margins))
+    comp._margins[key] = margins
+    with pytest.raises(compiler.ArtifactError, match="margin"):
+        compiler.validate_artifact(comp)
+
+
+@pytest.mark.faults
+def test_margin_corrupt_drill_rejected_at_load():
+    comp, _ = _compiled()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "a.npz")
+        comp.save(path)
+        with faults.injected("anytime.margin_corrupt"):
+            with pytest.raises(compiler.ArtifactError, match="margin"):
+                compiler.CompiledTM.load(path)
+        compiler.CompiledTM.load(path)           # disarmed: loads clean
+
+
+# --------------------------------------------------------------------------
+# engine-ladder quality dispatch
+# --------------------------------------------------------------------------
+
+def test_ladder_routes_quality_to_supporting_engines_only():
+    served = []
+
+    def quality_fn(x, quality=0):
+        served.append(quality)
+        return jnp.asarray([quality])
+
+    quality_fn.supports_quality = True
+    exact_fn = lambda x: jnp.asarray([0])
+
+    lad = ops.EngineLadder([("q", lambda: quality_fn)])
+    out = lad.run(lambda: 0, bucket=0, quality=2)
+    assert int(np.asarray(out)[0]) == 2 and lad.last_quality == 2
+    lad.run(lambda: 0, bucket=1, quality=0)
+    assert lad.last_quality == 0
+
+    # an engine without the capability serves exact and reports exact
+    lad2 = ops.EngineLadder([("plain", lambda: exact_fn)])
+    lad2.run(lambda: 0, bucket=0, quality=3)
+    assert lad2.last_quality == 0
+
+
+# --------------------------------------------------------------------------
+# brownout controller
+# --------------------------------------------------------------------------
+
+def test_brownout_escalates_immediately_and_steps_down_one_at_a_time():
+    c = BrownoutController(BrownoutConfig(watchdog_evals=100))
+    assert c.update(0.9) == 3                    # one eval -> top level
+    # 0.6 < exit[2]=0.65 -> steps down exactly one level per evaluation
+    assert c.update(0.6) == 2
+    assert c.update(0.1) == 1
+    assert c.update(0.1) == 0
+    assert c.update(0.1) == 0                    # idempotent at exact
+    assert c.escalations == 1 and c.stepdowns == 3
+
+
+def test_brownout_hysteresis_band_holds_level():
+    c = BrownoutController(BrownoutConfig(watchdog_evals=100))
+    assert c.update(0.55) == 1                   # >= enter[0]=0.5
+    # inside the band (exit[0]=0.3 <= p < enter[1]=0.7): holds level 1
+    for _ in range(5):
+        assert c.update(0.4) == 1
+    assert c.update(0.2) == 0
+
+
+def test_brownout_pressure_terms_and_clipping():
+    p = BrownoutController.pressure(pending=10, max_queue=10, oldest_age=0,
+                                    max_wait=0.02, deadline_frac=0.0)
+    assert p == 1.0
+    p = BrownoutController.pressure(pending=0, max_queue=None,
+                                    oldest_age=0.04, max_wait=0.02)
+    assert p == pytest.approx(0.5)
+    p = BrownoutController.pressure(pending=0, max_queue=None, oldest_age=0,
+                                    max_wait=0.02, deadline_frac=9.0)
+    assert p == 1.0                              # clipped
+
+
+def test_brownout_stuck_drill_watchdog_forces_recovery():
+    c = BrownoutController(BrownoutConfig(watchdog_evals=4))
+    assert c.update(0.95) == 3
+    with faults.injected("gateway.brownout_stuck"):
+        # primary step-down path is pinned: calm pressure leaves the
+        # level wedged until the watchdog's consecutive-calm count trips
+        levels = [c.update(0.05) for _ in range(3)]
+        assert levels == [3, 3, 3], "stuck drill should pin the level"
+        assert c.update(0.05) == 0, "watchdog must force exact serving"
+    assert c.watchdog_resets == 1
+    # watchdog is level-triggered, not a one-shot: a fresh overload still
+    # escalates and recovers normally once the fault is disarmed
+    assert c.update(0.9) == 3
+    assert c.update(0.05) == 2

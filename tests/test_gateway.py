@@ -4,7 +4,9 @@ drills for ``gateway.queue_overflow`` and ``gateway.drain_timeout``.
 
 The invariant every test closes with: the final health dict accounts for
 100% of offered requests (``unaccounted == 0``) — a request is either
-answered or shed with a typed reason, never silently dropped.
+answered (exactly or degraded, under brownout) or shed with a typed
+reason, never silently dropped:
+``offered == answered_exact + answered_degraded + shed_total``.
 """
 
 import asyncio
@@ -16,7 +18,7 @@ import pytest
 from repro.runtime import faults
 from repro.runtime.gateway import (
     DEADLINE_EXPIRED, DRAIN_TIMEOUT, ENGINE_FAILED, QUEUE_FULL,
-    SHUTTING_DOWN, Gateway, Response,
+    SHUTTING_DOWN, BrownoutController, Gateway, Response,
 )
 
 pytestmark = pytest.mark.gateway
@@ -34,6 +36,12 @@ def _go(coro):
 def _accounted(h):
     assert h["unaccounted"] == 0, h
     assert h["offered"] == h["answered"] + h["shed_total"], h
+    # the brownout refinement of the same invariant: answers split into
+    # exact and degraded tiers, and the tier histogram covers them all
+    assert h["answered"] == h["answered_exact"] + h["answered_degraded"], h
+    assert sum(h["quality_tiers"].values()) == h["answered"], h
+    degraded = sum(v for k, v in h["quality_tiers"].items() if k != "0")
+    assert degraded == h["answered_degraded"], h
 
 
 def test_full_buckets_flush_and_route_predictions():
@@ -215,6 +223,135 @@ def test_tenants_batch_independently():
     assert sorted(seen) == [("a", 2), ("b", 2)]   # never mixed in a bucket
     assert [r.pred for r in res] == [0, 10, 1, 11]
     assert set(h["tenants"]) == {"a", "b"}
+    _accounted(h)
+
+
+# -- brownout / anytime quality tiers (satellite of the anytime PR) ----------
+
+
+class _ScriptedBrownout(BrownoutController):
+    """Controller whose update() replays a fixed level script — makes
+    mixed exact/degraded traffic deterministic regardless of timing."""
+
+    def __init__(self, levels):
+        super().__init__()
+        self._levels = list(levels)
+
+    def update(self, pressure):
+        self.evals += 1
+        if self._levels:
+            self.level = self._levels.pop(0)
+        return self.level
+
+
+def quality_runner(tenant, rows, quality=0):
+    """Quality-aware echo runner: degraded buckets report a vote bound."""
+    preds = np.array([int(r[0]) for r in rows])
+    info = dict(quality=int(quality),
+                err_bound=16 * int(quality) if quality else None)
+    return preds, info
+
+
+@pytest.mark.anytime
+def test_mixed_exact_degraded_shed_accounting():
+    """offered == answered_exact + answered_degraded + shed_total under
+    traffic that hits all three outcomes; degraded responses carry the
+    served quality level and its concrete err_bound."""
+    async def go():
+        gw = await Gateway(quality_runner, bucket=2, max_queue=6,
+                           max_wait=0.01,
+                           brownout=_ScriptedBrownout([0, 2, 1])).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(8)]
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    shed = [r for r in res if not r.ok]
+    assert len(shed) == 2 and {r.reason for r in shed} == {QUEUE_FULL}
+    served = [r for r in res if r.ok]
+    assert sorted(r.quality for r in served) == [0, 0, 1, 1, 2, 2]
+    for r in served:
+        if r.quality == 0:
+            assert r.err_bound is None
+        else:
+            assert r.err_bound == 16 * r.quality   # bound travels with it
+        assert r.pred is not None                  # degraded != unanswered
+    assert h["answered_exact"] == 2 and h["answered_degraded"] == 4
+    assert h["quality_tiers"] == {"0": 2, "1": 2, "2": 2}
+    assert h["shed"][QUEUE_FULL] == 2
+    assert h["brownout"]["evals"] == 3
+    _accounted(h)
+
+
+@pytest.mark.anytime
+def test_plain_runner_under_brownout_stays_exact():
+    """Degradation is opt-in: a runner without a quality kwarg serves
+    exact answers even when the controller demands level 3."""
+    async def go():
+        gw = await Gateway(echo_runner, bucket=4, max_wait=0.01,
+                           brownout=_ScriptedBrownout([3])).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(4)]
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert all(r.ok and r.quality == 0 and r.err_bound is None for r in res)
+    assert h["answered_exact"] == 4 and h["answered_degraded"] == 0
+    assert h["quality_tiers"] == {"0": 4}
+    _accounted(h)
+
+
+@pytest.mark.anytime
+def test_brownout_deadline_attribution_unchanged():
+    """An expired request under brownout is still shed deadline_expired —
+    never served degraded, never silently dropped."""
+    ran_rows = []
+
+    def runner(tenant, rows, quality=0):
+        ran_rows.extend(int(r[0]) for r in rows)
+        return quality_runner(tenant, rows, quality)
+
+    async def go():
+        gw = await Gateway(runner, bucket=64, max_wait=0.03,
+                           brownout=_ScriptedBrownout([2])).start()
+        dead = gw.offer("t", np.array([7]), deadline=0.0)
+        live = gw.offer("t", np.array([8]), deadline=30.0)
+        res = await asyncio.gather(dead, live)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert not res[0].ok and res[0].reason == DEADLINE_EXPIRED
+    assert res[0].quality == 0 and res[0].err_bound is None
+    assert res[1].ok and res[1].pred == 8 and res[1].quality == 2
+    assert ran_rows == [8]
+    assert h["shed"][DEADLINE_EXPIRED] == 1 and h["answered_degraded"] == 1
+    _accounted(h)
+
+
+@pytest.mark.anytime
+def test_brownout_real_controller_escalates_under_queue_pressure():
+    """Integration: a real controller sees the backlog of the first flush
+    (pending/max_queue = 0.5 -> level 1), then calm (-> back to 0)."""
+    async def go():
+        gw = await Gateway(quality_runner, bucket=4, max_queue=8,
+                           max_wait=5.0,
+                           brownout=BrownoutController()).start()
+        futs = [gw.offer("t", np.array([i])) for i in range(8)]
+        res = await asyncio.gather(*futs)
+        h = await gw.drain()
+        return res, h
+
+    res, h = _go(go())
+    assert all(r.ok for r in res)
+    # first bucket flushes with 4 still queued -> pressure 0.5 -> level 1;
+    # second bucket flushes an empty queue -> pressure 0 -> step down
+    assert h["quality_tiers"] == {"0": 4, "1": 4}
+    assert h["brownout"]["escalations"] == 1
+    assert h["brownout"]["stepdowns"] == 1
+    assert [r.err_bound for r in res[:4]] == [16] * 4
     _accounted(h)
 
 

@@ -240,3 +240,32 @@ def test_preemption_handler_flag():
     assert not h.preempted
     h.trigger()
     assert h.preempted
+
+
+def test_preemption_nested_install_chains_and_unwinds():
+    """install() chains to the previous handler (both flags flip) and
+    uninstall() unwinds like a stack, restoring what was there before."""
+    import os
+    import signal
+
+    before = signal.getsignal(signal.SIGTERM)
+    outer = PreemptionHandler(signals=(signal.SIGTERM,)).install()
+    inner = PreemptionHandler(signals=(signal.SIGTERM,)).install()
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)
+        # chained delivery: the inner handler ran AND forwarded to outer
+        assert inner.preempted and outer.preempted
+        # idempotent: re-install without uninstall is a no-op
+        handler_now = signal.getsignal(signal.SIGTERM)
+        inner.install()
+        assert signal.getsignal(signal.SIGTERM) is handler_now
+    finally:
+        inner.uninstall()
+        outer_handler = signal.getsignal(signal.SIGTERM)
+        outer.uninstall()
+    # after the inner unwind, only the outer flag flips on a new signal
+    assert callable(outer_handler)
+    # fully unwound: the pre-test handler is back, and a never-installed
+    # handler uninstalls as a no-op
+    assert signal.getsignal(signal.SIGTERM) is before
+    PreemptionHandler().uninstall()
